@@ -1,0 +1,39 @@
+"""Fig. 11: per-layer decode latency breakdown (attention / dispatch /
+top-k+routing / FFN / combine) for Qwen3-30B at various replication
+ratios — shows METRO's FFN reduction dwarfs its routing overhead."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import build_placement, slots_for_ratio
+from repro.core.metrics import A100_40G
+from repro.sim import (ParallelismConfig, WorkloadConfig,
+                       decode_layer_breakdown, synth_topk_batch)
+from repro.sim.roofline import _route_stats
+
+
+def run(ratios=(1.125, 1.25, 1.5), ep=8, batch=256):
+    cfg = get_config("qwen3-30b-a3b")
+    par = ParallelismConfig(tp=1, ep=ep)
+    hw = A100_40G
+    wl = WorkloadConfig(zipf_alpha=1.2)
+    rows = []
+    rng = np.random.default_rng(0)
+    for ratio in ratios:
+        spd = slots_for_ratio(cfg.num_experts, ep, ratio)
+        loads = 1.0 / np.power(np.arange(1, cfg.num_experts + 1), 1.2)
+        p = build_placement(cfg.num_experts, ep, spd,
+                            loads=rng.permutation(loads))
+        ids = synth_topk_batch(rng, cfg.num_experts, batch,
+                               cfg.num_experts_per_tok, wl.zipf_alpha)
+        for algo, overhead in (("eplb", 0.0), ("metro", 26e-6)):
+            act, tok = _route_stats(cfg, p, ids, algo)
+            br = decode_layer_breakdown(cfg, hw, par, batch, 2048,
+                                        act, tok)
+            total = br["total"] + overhead
+            rows.append((
+                f"fig11_r{ratio}_{algo}", total * 1e6,
+                f"attn={br['attn']*1e6:.0f}us;ffn={br['ffn']*1e6:.0f}us;"
+                f"route={overhead*1e6:.0f}us;"
+                f"comm={(br['dispatch']+br['combine'])*1e6:.0f}us;"
+                f"act_max={act.max()}"))
+    return rows

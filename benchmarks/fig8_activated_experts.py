@@ -1,0 +1,55 @@
+"""Fig. 8: max activated experts per device per decode batch —
+EPLB routing vs METRO vs the optimal algorithm.
+
+Paper: METRO within 10.9% of optimal, up to 42.3% below EPLB, across
+DeepSeek-V3/Qwen3-30B x Humaneval/GSM8K x replication ratios.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (build_placement, optimal, routing_stats,
+                        slots_for_ratio)
+from repro.core import routing as R
+from repro.sim import synth_topk_batch
+
+WORKLOADS = {"humaneval-like": 1.2, "gsm8k-like": 0.8}
+
+
+def run(models=("qwen3-30b-a3b", "deepseek-v3-671b"),
+        ratios=(1.125, 1.25, 1.5), ep=8, batch=32, trials=8):
+    rows = []
+    for name in models:
+        cfg = get_config(name)
+        n, k = cfg.num_experts, cfg.num_experts_per_tok
+        for wl, alpha in WORKLOADS.items():
+            for ratio in ratios:
+                rng = np.random.default_rng(hash((name, wl)) % 2**32)
+                spd = slots_for_ratio(n, ep, ratio)
+                lam = {"eplb": [], "metro": [], "optimal": []}
+                for t in range(trials):
+                    loads = 1.0 / np.power(np.arange(1, n + 1), alpha)
+                    p = build_placement(n, ep, spd,
+                                        loads=rng.permutation(loads))
+                    ids = synth_topk_batch(rng, n, batch, k, alpha)
+                    idsj = jnp.asarray(ids, jnp.int32)
+                    hist = R.topk_histogram(idsj, n)
+                    for algo in ("eplb", "metro"):
+                        slots = R.route(
+                            algo, idsj, hist,
+                            jnp.asarray(p.expert_slots),
+                            jnp.asarray(p.expert_num_replicas),
+                            num_devices=ep, slots_per_device=spd)
+                        lam[algo].append(
+                            routing_stats(slots, p).max_activated)
+                    lam["optimal"].append(optimal.optimal_lambda(
+                        np.asarray(hist), p.placement_matrix()))
+                e, m, o = (float(np.mean(lam[a]))
+                           for a in ("eplb", "metro", "optimal"))
+                rows.append((
+                    f"fig8_{name}_{wl}_r{ratio}",
+                    m,
+                    f"eplb={e:.1f};optimal={o:.1f};"
+                    f"metro_vs_eplb={-100*(1-m/e):.1f}%;"
+                    f"metro_vs_opt=+{100*(m/o-1):.1f}%"))
+    return rows

@@ -1,0 +1,59 @@
+"""Figs. 9/10: end-to-end total token throughput + decode latency (TPOT)
+for METRO vs EPLB routing across models, workloads, replication ratios.
+
+Fig. 9 analogue: A100-class hardware model, Qwen3-30B (the paper's
+real-system testbed).  Fig. 10 analogue: B200 hardware model,
+Qwen3-235B (8 ranks) and DeepSeek-V3 (16 ranks).  Decode-heavy
+(humaneval/instructcoder-like, skewed experts) and prefill-heavy
+(gsm8k-like) workloads.
+"""
+from repro.configs import get_config
+from repro.core.metrics import A100_40G, B200
+from repro.sim import ParallelismConfig, WorkloadConfig, simulate_serving
+
+SETUPS = [
+    # (fig, model, hw, ep, decode_batch, n_req)
+    ("fig9", "qwen3-30b-a3b", A100_40G, 8, 256, 32),
+    ("fig10", "qwen3-235b-a22b", B200, 8, 1024, 64),
+    ("fig10", "deepseek-v3-671b", B200, 16, 1024, 64),
+]
+WORKLOADS = [
+    WorkloadConfig("decodeheavy", zipf_alpha=1.2, prompt_len=1024,
+                   gen_len=2048),
+    WorkloadConfig("prefillheavy", zipf_alpha=0.8, prompt_len=4096,
+                   gen_len=256),
+]
+
+
+def run(ratios=(1.0, 1.125, 1.25, 1.5)):
+    rows = []
+    for fig, model, hw, ep, dbatch, nreq in SETUPS:
+        cfg = get_config(model)
+        par = ParallelismConfig(tp=1, ep=ep)
+        for wl in WORKLOADS:
+            base = {}
+            for ratio in ratios:
+                for algo in ("eplb", "metro"):
+                    r = simulate_serving(
+                        cfg, hw, par, wl, algo=algo,
+                        replication_ratio=ratio, decode_batch=dbatch,
+                        n_requests=nreq,
+                        seed=hash((model, wl.name)) % 2**31)
+                    key = (ratio, algo)
+                    base[key] = r
+                    if algo == "metro" and (ratio, "eplb") in base:
+                        e = base[(ratio, "eplb")]
+                        dt = -100 * (1 - r["tpot_s"] / e["tpot_s"])
+                        dthr = 100 * (r["total_token_throughput"]
+                                      / e["total_token_throughput"] - 1)
+                        derived = (f"tpot_vs_eplb={dt:+.1f}%;"
+                                   f"tput_vs_eplb={dthr:+.1f}%;"
+                                   f"act={r['max_activated']}vs"
+                                   f"{e['max_activated']}")
+                    else:
+                        derived = (f"tput={r['total_token_throughput']:.0f};"
+                                   f"act={r['max_activated']}")
+                    rows.append((
+                        f"{fig}_{model}_{wl.name}_r{ratio}_{algo}",
+                        r["tpot_s"] * 1e6, derived))
+    return rows

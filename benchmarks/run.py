@@ -1,0 +1,55 @@
+"""Benchmark driver — one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig5_engine           real serving engine (CPU, reduced config)
+  fig6_routing_overhead optimal vs METRO routing wall-clock
+  fig8_activated        max activated experts: EPLB / METRO / optimal
+  fig9_10_e2e           simulated TPOT + total throughput
+  fig11_breakdown       per-layer latency breakdown
+  fig12_pareto          decode Pareto frontier over TPxEPxbatch
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark prefixes to run")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced trial counts")
+    args = ap.parse_args()
+
+    from benchmarks import (fig5_engine, fig6_routing_overhead,
+                            fig8_activated_experts, fig9_10_e2e,
+                            fig11_breakdown, fig12_pareto)
+    suites = {
+        "fig6": lambda: fig6_routing_overhead.run(),
+        "fig8": lambda: fig8_activated_experts.run(
+            trials=3 if args.fast else 8),
+        "fig9": lambda: fig9_10_e2e.run(),
+        "fig11": lambda: fig11_breakdown.run(),
+        "fig12": lambda: fig12_pareto.run(),
+        "fig5": lambda: fig5_engine.run(),
+    }
+    only = args.only.split(",") if args.only else None
+    print("name,us_per_call,derived")
+    for key, fn in suites.items():
+        if only and not any(key.startswith(o) for o in only):
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # keep the suite running
+            print(f"{key}_ERROR,0,{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Decode throughput-latency Pareto analysis (paper §VI-C, Figs. 12/13).
+
+Sweeps batch sizes x TP/EP mappings x replication ratios on the B200
+hardware model and prints the Pareto frontier for METRO vs EPLB,
+including the fixed-SLO throughput ratio (the paper's 1.98-4.11x
+headline).
+
+    PYTHONPATH=src python examples/pareto_analysis.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import build_placement, slots_for_ratio
+from repro.core.metrics import B200
+from repro.sim import ParallelismConfig, WorkloadConfig, simulate_decode_step
+
+
+def pareto_frontier(points):
+    pts = sorted(points, key=lambda p: p[1])
+    out, best = [], -1.0
+    for tput, tpot, tag in pts:
+        if tput > best:
+            out.append((tput, tpot, tag))
+            best = tput
+    return out
+
+
+def main():
+    cfg = get_config("qwen3-235b-a22b")
+    chips = 8
+    wl = WorkloadConfig(zipf_alpha=1.2, domains=4)
+    ctx = 2048
+    for ratio in (1.0, 1.5):
+        print(f"\n=== replication {ratio}x ===")
+        for algo in ("eplb", "metro"):
+            pts = []
+            for tp in (1, 2, 4, 8):
+                ep = chips // tp
+                par = ParallelismConfig(tp=tp, ep=ep)
+                rng = np.random.default_rng(7)
+                spd = slots_for_ratio(cfg.num_experts, ep, ratio)
+                p = build_placement(
+                    cfg.num_experts, ep, spd,
+                    loads=1.0 / np.arange(1, cfg.num_experts + 1) ** 1.2)
+                for b in (1024, 512, 256, 128, 64):
+                    r = simulate_decode_step(cfg, B200, par, b, ctx,
+                                             algo, p, wl, rng)
+                    pts.append((b / r["step_s"], r["step_s"],
+                                f"tp{tp}/ep{ep}/b{b}"))
+            front = pareto_frontier(pts)
+            print(f"  {algo}:")
+            for tput, tpot, tag in front:
+                print(f"    {tput:9.0f} tok/s @ TPOT {tpot*1e3:6.2f} ms "
+                      f"({tag})")
+
+
+if __name__ == "__main__":
+    main()

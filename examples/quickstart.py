@@ -1,0 +1,49 @@
+"""Quickstart: METRO routing in 60 seconds.
+
+Builds an EPLB placement, routes a skewed decode batch with both the
+token-balancing baseline and METRO, and shows the activated-expert gap
+(the paper's central quantity), validated against the optimal solver.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (build_placement, optimal, route, routing_stats,
+                        slots_for_ratio, topk_histogram)
+from repro.sim import synth_topk_batch
+
+NUM_EXPERTS, EP_RANKS, TOP_K, BATCH = 64, 8, 4, 48
+REPLICATION = 1.5
+
+rng = np.random.default_rng(0)
+
+# 1. EPLB placement: replicate hot experts, pack onto EP ranks
+loads = 1.0 / np.arange(1, NUM_EXPERTS + 1) ** 1.2
+spd = slots_for_ratio(NUM_EXPERTS, EP_RANKS, REPLICATION)
+placement = build_placement(NUM_EXPERTS, EP_RANKS, spd, loads=loads)
+print(f"placement: {NUM_EXPERTS} experts -> {placement.num_slots} replica "
+      f"slots on {EP_RANKS} EP ranks ({placement.replication_ratio:.2f}x)")
+
+# 2. a skewed decode batch picks its top-k experts
+ids = jnp.asarray(synth_topk_batch(rng, NUM_EXPERTS, BATCH, TOP_K,
+                                   alpha=1.2))
+hist = topk_histogram(ids, NUM_EXPERTS)
+
+# 3. route with both algorithms
+for algo in ("eplb", "metro"):
+    slots = route(algo, ids, hist, jnp.asarray(placement.expert_slots),
+                  jnp.asarray(placement.expert_num_replicas),
+                  num_devices=EP_RANKS, slots_per_device=spd)
+    st = routing_stats(slots, placement)
+    print(f"{algo:6s}: max activated experts/rank = {st.max_activated:2d} "
+          f"(mean {st.mean_activated:.1f}), max tokens/rank = "
+          f"{st.max_tokens}")
+
+# 4. how close is METRO to optimal?
+lam_opt, _ = optimal.solve_min_exp_routing(
+    np.asarray(hist), placement.placement_matrix())
+print(f"optimal: max activated experts/rank = {lam_opt}")
+print("\nIn the memory-bound decode regime, per-rank MoE latency is "
+      "proportional to\nactivated experts — METRO minimizes exactly "
+      "that (paper §III-B).")

@@ -1,0 +1,60 @@
+"""End-to-end driver: serve a small MoE model with batched requests.
+
+Runs the full serving engine — continuous batching, chunked prefill +
+decode co-deployment, METRO decode routing, periodic EPLB rebalancing
+with physical weight reshuffling — on a reduced Qwen3-30B-A3B-family
+config on CPU, then compares METRO vs EPLB routing on the identical
+request stream.
+
+    PYTHONPATH=src python examples/serve_moe.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import build_placement, slots_for_ratio
+from repro.models import init_lm
+from repro.serving import EngineConfig, ServingEngine
+from repro.sharding.policy import make_dist
+
+
+def build_engine(decode_algo: str):
+    cfg = get_config("qwen3-30b-a3b").reduced()
+    ep = 4
+    spd = slots_for_ratio(cfg.num_experts, ep, 1.5)
+    dist = make_dist(None, ep_size=ep, slots_per_device=spd)
+    placement = build_placement(cfg.num_experts, ep, spd)
+    params = init_lm(cfg, jax.random.PRNGKey(0), dist,
+                     replica_expert=placement.replica_expert)
+    ecfg = EngineConfig(max_batch=8, max_len=96, decode_algo=decode_algo,
+                        rebalance_every=32)
+    return cfg, ServingEngine(cfg, dist, params, ecfg)
+
+
+def main():
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, 256, int(rng.integers(4, 24)))
+               for _ in range(12)]
+
+    for algo in ("eplb", "metro"):
+        cfg, eng = build_engine(algo)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=16)
+        t0 = time.perf_counter()
+        s = eng.run()
+        wall = time.perf_counter() - t0
+        print(f"[{algo:5s}] {s['requests']} requests in {wall:.1f}s | "
+              f"TTFT {s['ttft_mean']*1e3:.0f}ms  "
+              f"TPOT {s['tpot_mean']*1e3:.1f}ms  "
+              f"throughput {s['total_token_throughput']:.1f} tok/s  "
+              f"({s['decode_steps']} decode / {s['prefill_steps']} "
+              f"prefill steps)")
+    print("\n(identical generated tokens across algos — routing only "
+          "moves compute; on TPU the decode-phase gain comes from fewer "
+          "activated experts per chip)")
+
+
+if __name__ == "__main__":
+    main()

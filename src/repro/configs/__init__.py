@@ -1,0 +1,31 @@
+"""Architecture registry: importing this package registers all configs."""
+from repro.configs.base import ModelConfig, REGISTRY, get_config, register
+from repro.configs.shapes import SHAPES, ShapeCell, input_specs, cell_applicable
+
+# assigned architectures (one module per arch id)
+from repro.configs.pixtral_12b import PIXTRAL_12B
+from repro.configs.olmo_1b import OLMO_1B
+from repro.configs.deepseek_67b import DEEPSEEK_67B
+from repro.configs.gemma3_12b import GEMMA3_12B
+from repro.configs.qwen3_4b import QWEN3_4B
+from repro.configs.whisper_base import WHISPER_BASE
+from repro.configs.jamba_1_5_large import JAMBA_1_5_LARGE
+from repro.configs.mixtral_8x22b import MIXTRAL_8X22B
+from repro.configs.qwen2_moe_a2_7b import QWEN2_MOE_A2_7B
+from repro.configs.falcon_mamba_7b import FALCON_MAMBA_7B
+
+# the paper's own evaluation models
+from repro.configs.paper_models import (
+    QWEN3_30B_A3B, QWEN3_235B_A22B, DEEPSEEK_V3_671B)
+
+ASSIGNED_ARCHS = [
+    "pixtral-12b", "olmo-1b", "deepseek-67b", "gemma3-12b", "qwen3-4b",
+    "whisper-base", "jamba-1.5-large-398b", "mixtral-8x22b",
+    "qwen2-moe-a2.7b", "falcon-mamba-7b",
+]
+
+__all__ = [
+    "ModelConfig", "REGISTRY", "get_config", "register",
+    "SHAPES", "ShapeCell", "input_specs", "cell_applicable",
+    "ASSIGNED_ARCHS",
+]

@@ -1,0 +1,224 @@
+"""Model/architecture configuration system.
+
+One frozen dataclass describes every supported architecture family:
+dense decoder LMs, GQA variants (qk-norm, sliding-window, local:global
+interleave), MoE (routed + shared experts), SSM (mamba1), hybrid
+(jamba-style mamba+attention+MoE interleave), and encoder-decoder
+(whisper-style, stubbed frontend).
+
+Configs register themselves in ``REGISTRY`` (``--arch <id>`` selects one).
+``reduced()`` produces the CPU-smoke-test sized variant of the same
+family, preserving every structural feature (pattern period, MoE top-k,
+shared experts, qk-norm, ...) while shrinking widths/depths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+REGISTRY: dict[str, "ModelConfig"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str               # dense | moe | ssm | hybrid | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention features ---
+    qk_norm: bool = False
+    nonparametric_norm: bool = False     # olmo: LN without scale/bias
+    sliding_window: Optional[int] = None # SWA width where used
+    local_global_period: int = 0         # gemma3: N local then 1 global
+    rope_theta: float = 1e4
+    max_seq_len: int = 131072
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    d_ff_expert: int = 0                 # per-expert hidden (0 -> d_ff)
+    moe_period: int = 1                  # MoE FFN every k-th layer
+    norm_topk_prob: bool = True          # softmax over selected k
+
+    # --- SSM (mamba1) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    attn_period: int = 0                 # hybrid: 1 attn layer per period
+    attn_offset: int = 0                 # position of attn layer in period
+
+    # --- encoder-decoder (whisper-style) ---
+    encoder_layers: int = 0
+    encoder_frames: int = 0              # stubbed frame-embedding length
+
+    # --- embeddings / IO ---
+    input_mode: str = "tokens"           # tokens | embeddings (vlm stub)
+    tie_embeddings: bool = False
+    gated_mlp: bool = True               # SwiGLU (True) vs GELU MLP
+
+    # --- which shape cells apply (DESIGN.md §7) ---
+    supports_decode: bool = True
+    supports_long_context: bool = False
+
+    def __post_init__(self):
+        assert self.family in ("dense", "moe", "ssm", "hybrid", "encdec")
+        if self.family in ("moe", "hybrid"):
+            assert self.num_experts > 0 and self.num_experts_per_tok > 0
+        if self.family in ("ssm", "hybrid"):
+            assert self.ssm_state > 0
+
+    # ------------------------------------------------------------------
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def expert_hidden(self) -> int:
+        return self.d_ff_expert or self.d_ff
+
+    @property
+    def pattern_period(self) -> int:
+        """Length of the repeating layer block (for scan-over-blocks)."""
+        p = 1
+        if self.local_global_period:
+            p = self.local_global_period + 1
+        if self.attn_period:
+            p = max(p, self.attn_period)
+        if self.moe_period > 1:
+            p = _lcm(p, self.moe_period)
+        assert self.num_layers % p == 0, (
+            f"{self.name}: {self.num_layers} layers not divisible by "
+            f"pattern period {p}")
+        return p
+
+    def layer_kinds(self) -> list[tuple[str, str]]:
+        """(mixer, ffn) kind for each layer inside one pattern period.
+
+        mixer in {attn_full, attn_swa, mamba}; ffn in {dense, moe}.
+        """
+        kinds = []
+        for i in range(self.pattern_period):
+            if self.family in ("ssm", "hybrid"):
+                if self.attn_period and i % self.attn_period == self.attn_offset:
+                    mixer = "attn_full"
+                else:
+                    mixer = "mamba"
+            elif self.local_global_period:
+                # gemma3-style: local(SWA) x N then 1 global
+                mixer = ("attn_full"
+                         if (i + 1) % (self.local_global_period + 1) == 0
+                         else "attn_swa")
+            elif self.sliding_window:
+                mixer = "attn_swa"
+            else:
+                mixer = "attn_full"
+            if self.family == "ssm":
+                ffn = "none"    # mamba1 block has no separate FFN
+            elif self.is_moe and (i % self.moe_period == self.moe_period - 1
+                                  if self.moe_period > 1 else True):
+                ffn = "moe"
+            else:
+                ffn = "dense"
+            kinds.append((mixer, ffn))
+        return kinds
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Total parameters N (for 6*N*D model-FLOPs accounting)."""
+        d, v = self.d_model, self.vocab_size
+        emb = d * v * (1 if self.tie_embeddings else 2)
+        per_period = 0
+        for mixer, ffn in self.layer_kinds():
+            if mixer.startswith("attn"):
+                qkv = d * self.head_dim * (self.num_heads + 2 * self.num_kv_heads)
+                per_period += qkv + self.num_heads * self.head_dim * d
+            elif mixer == "mamba":
+                di = self.ssm_expand * d
+                dt_rank = max(d // 16, 1)
+                per_period += (d * 2 * di + di * self.ssm_conv
+                               + di * (dt_rank + 2 * self.ssm_state)
+                               + dt_rank * di + di * self.ssm_state + di
+                               + di * d)
+            if ffn == "dense":
+                n_mat = 3 if self.gated_mlp else 2
+                per_period += n_mat * d * self.d_ff
+            elif ffn == "moe":
+                n_mat = 3 if self.gated_mlp else 2
+                fe = self.expert_hidden
+                per_period += d * self.num_experts          # router
+                per_period += n_mat * d * fe * self.num_experts
+                per_period += n_mat * d * fe * self.num_shared_experts
+        blocks = self.num_layers // self.pattern_period
+        total = emb + per_period * blocks
+        if self.encoder_layers:
+            enc_attn = d * self.head_dim * (self.num_heads + 2 * self.num_kv_heads) \
+                + self.num_heads * self.head_dim * d
+            n_mat = 3 if self.gated_mlp else 2
+            total += self.encoder_layers * (enc_attn + n_mat * d * self.d_ff)
+            # decoder cross-attention
+            total += self.num_layers * enc_attn
+        return total
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k + shared only)."""
+        if not self.is_moe:
+            return self.param_count()
+        full = self.param_count()
+        n_mat = 3 if self.gated_mlp else 2
+        fe = self.expert_hidden
+        moe_layers = sum(1 for _, f in self.layer_kinds() if f == "moe") \
+            * (self.num_layers // self.pattern_period)
+        all_experts = n_mat * self.d_model * fe * self.num_experts * moe_layers
+        active_experts = n_mat * self.d_model * fe * self.num_experts_per_tok \
+            * moe_layers
+        return full - all_experts + active_experts
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test sized config of the same family (CPU-runnable)."""
+        period = self.pattern_period
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=period if period > 1 else min(2, self.num_layers),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            head_dim=16,
+            d_ff=128,
+            d_ff_expert=32 if self.d_ff_expert else 0,
+            vocab_size=256,
+            num_experts=min(self.num_experts, 8),
+            num_experts_per_tok=min(self.num_experts_per_tok, 2),
+            num_shared_experts=min(self.num_shared_experts, 2),
+            ssm_state=min(self.ssm_state, 8),
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_frames=min(self.encoder_frames, 16) or 0,
+            max_seq_len=512,
+            sliding_window=16 if self.sliding_window else None,
+        )
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (triggers registration)
+    if name not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+    return a * b // math.gcd(a, b)

@@ -1,0 +1,25 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096 (attention-free) vocab=65024,
+ssm_state=16 — mamba1 arch. [arXiv:2410.05355; unverified]
+
+METRO is inapplicable (no MoE, no attention); included per the
+assignment and noted in DESIGN.md §Arch-applicability.  long_500k runs
+(O(1) recurrent state).
+"""
+from repro.configs.base import ModelConfig, register
+
+FALCON_MAMBA_7B = register(ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    num_layers=64,
+    d_model=4096,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=65024,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    tie_embeddings=True,
+    supports_long_context=True,
+))

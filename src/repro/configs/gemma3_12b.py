@@ -1,0 +1,26 @@
+"""gemma3-12b [dense]: 48L d_model=3840 16H (GQA kv=8) d_ff=15360
+vocab=262144 — 5:1 local:global attention interleave, 128k context.
+[hf:google/gemma-3-1b-pt; unverified]
+
+long_500k runs: 5/6 of layers are sliding-window (1024) with rolling
+caches; the global layers use the sequence-sharded KV path (DESIGN.md §7).
+"""
+from repro.configs.base import ModelConfig, register
+
+GEMMA3_12B = register(ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    num_layers=48,
+    d_model=3840,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    qk_norm=True,
+    local_global_period=5,      # 5 local then 1 global
+    sliding_window=1024,
+    rope_theta=1e6,
+    tie_embeddings=True,
+    supports_long_context=True,
+))

@@ -1,0 +1,28 @@
+"""jamba-1.5-large-398b [hybrid]: 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16e top-2 — Mamba+attn 1:7 interleave, MoE
+every other layer. [arXiv:2403.19887; hf]
+
+Pattern period 8: attention at offset 4, mamba elsewhere; MoE FFN on odd
+layers (9 blocks of 8 layers). METRO applies to the MoE layers; the SSM
+layers carry the 500k context (O(1) state).
+"""
+from repro.configs.base import ModelConfig, register
+
+JAMBA_1_5_LARGE = register(ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    num_experts=16,
+    num_experts_per_tok=2,
+    moe_period=2,
+    ssm_state=16,
+    attn_period=8,
+    attn_offset=4,
+    supports_long_context=True,
+))

@@ -1,0 +1,23 @@
+"""mixtral-8x22b [moe]: 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8e top-2 — 8 experts top-2, SWA. [arXiv:2401.04088; hf]
+
+long_500k runs via the sliding-window (4096) rolling KV cache.
+"""
+from repro.configs.base import ModelConfig, register
+
+MIXTRAL_8X22B = register(ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    num_experts=8,
+    num_experts_per_tok=2,
+    sliding_window=4096,
+    rope_theta=1e6,
+    supports_long_context=True,
+))

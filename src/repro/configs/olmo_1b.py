@@ -1,0 +1,18 @@
+"""olmo-1b [dense]: 16L d_model=2048 16H (GQA kv=16, i.e. MHA) d_ff=8192
+vocab=50304 — non-parametric LayerNorm. [arXiv:2402.00838; hf]"""
+from repro.configs.base import ModelConfig, register
+
+OLMO_1B = register(ModelConfig(
+    name="olmo-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=50304,
+    nonparametric_norm=True,
+    tie_embeddings=True,
+    supports_long_context=False,
+))

@@ -1,0 +1,65 @@
+"""The paper's own evaluation models (§VI-A), beyond the assigned 10.
+
+  * Qwen3-30B-A3B   — real-system testbed (128 experts, top-8)
+  * Qwen3-235B-A22B — simulator testbed (128 experts, top-8)
+  * DeepSeek-V3-671B — simulator testbed (256 experts, top-8 + 1 shared)
+
+DeepSeek-V3 uses MLA attention; we approximate with GQA (kv=16) since
+MLA is orthogonal to the paper's contribution (expert routing), and note
+the deviation here.  DS-V3's first-3-dense-layers detail is likewise
+folded into an all-MoE stack.
+"""
+from repro.configs.base import ModelConfig, register
+
+QWEN3_30B_A3B = register(ModelConfig(
+    name="qwen3-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=6144,
+    d_ff_expert=768,
+    vocab_size=151936,
+    qk_norm=True,
+    num_experts=128,
+    num_experts_per_tok=8,
+    rope_theta=1e6,
+    supports_long_context=False,
+))
+
+QWEN3_235B_A22B = register(ModelConfig(
+    name="qwen3-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=12288,
+    d_ff_expert=1536,
+    vocab_size=151936,
+    qk_norm=True,
+    num_experts=128,
+    num_experts_per_tok=8,
+    rope_theta=1e6,
+    supports_long_context=False,
+))
+
+DEEPSEEK_V3_671B = register(ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=16,            # MLA approximated by GQA (see docstring)
+    head_dim=128,
+    d_ff=18432,
+    d_ff_expert=2048,
+    vocab_size=129280,
+    num_experts=256,
+    num_experts_per_tok=8,
+    num_shared_experts=1,
+    supports_long_context=False,
+))

@@ -1,0 +1,23 @@
+"""pixtral-12b [vlm]: Pixtral-ViT frontend (stubbed) + Mistral-Nemo-style
+decoder backbone. 40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072.
+[hf:mistralai/Pixtral-12B-2409; unverified]
+
+The vision frontend is a STUB per the assignment: inputs are precomputed
+patch embeddings of shape (B, S, d_model).
+"""
+from repro.configs.base import ModelConfig, register
+
+PIXTRAL_12B = register(ModelConfig(
+    name="pixtral-12b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    rope_theta=1e6,
+    input_mode="embeddings",
+    supports_long_context=False,   # full attention only
+))

@@ -1,0 +1,26 @@
+"""qwen2-moe-a2.7b [moe]: 24L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=151936, MoE 60e top-4 — 4 shared + 60 routed top-4.
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+
+60 routed experts on a 16-way EP group pad to 64 replica slots via the
+EPLB replication machinery (core/placement.slots_for_ratio).
+"""
+from repro.configs.base import ModelConfig, register
+
+QWEN2_MOE_A2_7B = register(ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    d_ff_expert=1408,
+    vocab_size=151936,
+    num_experts=60,
+    num_experts_per_tok=4,
+    num_shared_experts=4,
+    norm_topk_prob=False,        # qwen1.5-moe: softmax over all experts
+    supports_long_context=False,
+))

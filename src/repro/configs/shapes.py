@@ -1,0 +1,68 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+LM transformer shapes are seq_len x global_batch.  ``decode_*`` /
+``long_*`` lower ``serve_step`` (one new token against a KV cache of
+seq_len), not ``train_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """Whether this (arch x shape) cell runs (DESIGN.md §7)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: no sub-quadratic path at 500k"
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, no device allocation — feeds
+    jax.jit(...).lower() in the dry-run.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    bf16 = jnp.bfloat16
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_mode == "embeddings":
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.encoder_layers:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), bf16)
+    else:  # decode: one new token per request against a seq_len cache
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        specs["pos"] = jax.ShapeDtypeStruct((b,), i32)
+        # KV / SSM caches are built by the model's cache_specs(); the
+        # dry-run threads them as separate inputs.
+    return specs

@@ -1,0 +1,28 @@
+"""whisper-base [audio]: 6L d_model=512 8H d_ff=2048 vocab=51865 —
+encoder-decoder; conv frontend STUBBED (precomputed frame embeddings).
+[arXiv:2212.04356; unverified]
+
+Backbone-only per the assignment: input_specs() provides (B, 1500, 512)
+frame embeddings for the encoder; the decoder consumes tokens.  Decode
+shapes are lowered mechanically (32k self-attn cache) to prove the
+sharding even though the real model caps at 448 decoder positions; noted
+in DESIGN.md §7.
+"""
+from repro.configs.base import ModelConfig, register
+
+WHISPER_BASE = register(ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    num_layers=6,               # decoder layers
+    encoder_layers=6,
+    encoder_frames=1500,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    gated_mlp=False,            # GELU MLP
+    rope_theta=1e4,             # whisper uses learned/sinusoidal; RoPE stub
+    supports_long_context=False,
+))

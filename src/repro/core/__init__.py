@@ -1,0 +1,28 @@
+"""METRO core: expert placement, token routing, quality metrics, oracle.
+
+The paper's contribution lives here:
+  placement.py — EPLB replication + balanced packing (substrate)
+  routing.py   — METRO greedy router + EPLB token-balanced baseline
+  optimal.py   — exact MIN-EXP-ROUTING solver (binary search + matching)
+  metrics.py   — activated-expert metrics + memory-bound runtime model
+"""
+from repro.core.types import Placement, RoutingStats
+from repro.core.placement import build_placement, slots_for_ratio
+from repro.core.routing import (
+    route, route_metro, route_eplb, route_single,
+    metro_token_slots, topk_histogram, rank_within_expert,
+)
+from repro.core.optimal import solve_min_exp_routing, optimal_lambda
+from repro.core.metrics import (
+    activated_per_device, tokens_per_device, routing_stats,
+    moe_layer_runtime, HardwareSpec, TPU_V5E, A100_40G, B200,
+)
+
+__all__ = [
+    "Placement", "RoutingStats", "build_placement", "slots_for_ratio",
+    "route", "route_metro", "route_eplb", "route_single",
+    "metro_token_slots", "topk_histogram", "rank_within_expert",
+    "solve_min_exp_routing", "optimal_lambda",
+    "activated_per_device", "tokens_per_device", "routing_stats",
+    "moe_layer_runtime", "HardwareSpec", "TPU_V5E", "A100_40G", "B200",
+]

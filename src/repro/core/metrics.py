@@ -1,0 +1,103 @@
+"""Routing-quality metrics and the memory-bound runtime model (§III-B).
+
+The central quantity is *activated expert replicas per device*: in the
+memory-bound regime per-device MoE runtime ~ activated_replicas *
+expert_weight_bytes / HBM_bw (weight streaming dominates; activation
+traffic is <0.6% at decode batches <= 1K, paper §III-B).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Placement, RoutingStats
+
+_INT = jnp.int32
+
+
+def activated_per_device(
+    token_slots: jax.Array,        # any shape, physical slot per (token,k), -1 pad
+    num_devices: int,
+    slots_per_device: int,
+) -> jax.Array:
+    """Number of activated replica slots on each EP device (jit-friendly)."""
+    flat = token_slots.reshape(-1)
+    valid = flat >= 0
+    r = num_devices * slots_per_device
+    hits = jnp.zeros(r, _INT).at[jnp.where(valid, flat, 0)].add(
+        valid.astype(_INT))
+    active = (hits > 0).astype(_INT).reshape(num_devices, slots_per_device)
+    return active.sum(axis=1)
+
+
+def tokens_per_device(
+    token_slots: jax.Array,
+    num_devices: int,
+    slots_per_device: int,
+) -> jax.Array:
+    flat = token_slots.reshape(-1)
+    valid = flat >= 0
+    r = num_devices * slots_per_device
+    hits = jnp.zeros(r, _INT).at[jnp.where(valid, flat, 0)].add(
+        valid.astype(_INT))
+    return hits.reshape(num_devices, slots_per_device).sum(axis=1)
+
+
+def routing_stats(
+    token_slots: np.ndarray | jax.Array,
+    placement: Placement,
+) -> RoutingStats:
+    g, s = placement.num_devices, placement.slots_per_device
+    act = np.asarray(activated_per_device(jnp.asarray(token_slots), g, s))
+    tok = np.asarray(tokens_per_device(jnp.asarray(token_slots), g, s))
+    return RoutingStats(
+        max_activated=int(act.max()),
+        mean_activated=float(act.mean()),
+        activated_per_device=act,
+        max_tokens=int(tok.max()),
+        mean_tokens=float(tok.mean()),
+        tokens_per_device=tok,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants for the runtime model and the simulator."""
+
+    name: str
+    peak_flops: float        # per chip, bf16
+    hbm_bw: float            # bytes/s per chip
+    link_bw: float           # bytes/s per ICI/NVLink link
+    collective_launch: float # fixed latency per collective, seconds
+    hbm_capacity: float      # bytes
+
+
+TPU_V5E = HardwareSpec("tpu-v5e", 197e12, 819e9, 50e9, 1e-6, 16e9)
+A100_40G = HardwareSpec("a100-40g", 312e12, 1555e9, 600e9 / 8, 20e-6, 40e9)
+B200 = HardwareSpec("b200", 2250e12, 8000e9, 900e9 / 8, 20e-6, 192e9)
+
+
+def moe_layer_runtime(
+    activated_per_dev: np.ndarray,   # [G]
+    tokens_per_dev: np.ndarray,      # [G]
+    *,
+    d_model: int,
+    d_ff: int,
+    bytes_per_param: float,
+    hw: HardwareSpec,
+    gated: bool = True,
+) -> float:
+    """Memory-bound-aware per-layer MoE FFN runtime model (paper §III-B +
+    the proprietary simulator's roofline form): per device, runtime =
+    max(weight+activation traffic / HBM_bw, flops / peak); the layer time
+    is the *slowest* device (load imbalance model)."""
+    n_mats = 3 if gated else 2
+    w_bytes = n_mats * d_model * d_ff * bytes_per_param
+    act_bytes = tokens_per_dev * d_model * 2 * 2.0   # in+out, bf16
+    flops = tokens_per_dev * (2.0 * n_mats * d_model * d_ff)
+    t_mem = (activated_per_dev * w_bytes + act_bytes) / hw.hbm_bw
+    t_comp = flops / hw.peak_flops
+    return float(np.max(np.maximum(t_mem, t_comp)))

@@ -1,0 +1,128 @@
+"""Optimal MIN-EXP-ROUTING solver (paper §IV-B) — offline oracle.
+
+Binary search on lambda; each candidate tested for feasibility with a
+capacity-constrained bipartite matching (experts -> devices, device
+capacity lambda) solved by Dinic's max-flow — the same construction as
+the paper's CPU implementation.  Host-side numpy/python only: the paper
+itself shows this is too slow for the datapath (31-104% of FFN runtime);
+we keep it as the routing-quality oracle for Fig. 8 and the tests.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+
+class _Dinic:
+    def __init__(self, n: int):
+        self.n = n
+        self.to: list[int] = []
+        self.cap: list[int] = []
+        self.head: list[list[int]] = [[] for _ in range(n)]
+
+    def add_edge(self, u: int, v: int, c: int) -> int:
+        eid = len(self.to)
+        self.head[u].append(eid)
+        self.to.append(v)
+        self.cap.append(c)
+        self.head[v].append(eid + 1)
+        self.to.append(u)
+        self.cap.append(0)
+        return eid
+
+    def max_flow(self, s: int, t: int) -> int:
+        flow = 0
+        while True:
+            level = [-1] * self.n
+            level[s] = 0
+            q = deque([s])
+            while q:
+                u = q.popleft()
+                for eid in self.head[u]:
+                    v = self.to[eid]
+                    if self.cap[eid] > 0 and level[v] < 0:
+                        level[v] = level[u] + 1
+                        q.append(v)
+            if level[t] < 0:
+                return flow
+            it = [0] * self.n
+
+            def dfs(u: int, f: int) -> int:
+                if u == t:
+                    return f
+                while it[u] < len(self.head[u]):
+                    eid = self.head[u][it[u]]
+                    v = self.to[eid]
+                    if self.cap[eid] > 0 and level[v] == level[u] + 1:
+                        d = dfs(v, min(f, self.cap[eid]))
+                        if d > 0:
+                            self.cap[eid] -= d
+                            self.cap[eid ^ 1] += d
+                            return d
+                    it[u] += 1
+                return 0
+
+            while True:
+                f = dfs(s, 1 << 30)
+                if f == 0:
+                    break
+                flow += f
+
+
+def _feasible(active: np.ndarray, A: np.ndarray, lam: int):
+    """Matching feasibility for candidate lambda. Returns (ok, assignment)
+    where assignment[i] = device for active expert i (or -1)."""
+    n, g = A.shape
+    act = np.nonzero(active)[0]
+    m = len(act)
+    if m == 0:
+        return True, np.full(n, -1, dtype=np.int64)
+    s, t = m + g, m + g + 1
+    din = _Dinic(m + g + 2)
+    expert_edges: dict[tuple[int, int], int] = {}
+    for li, e in enumerate(act):
+        din.add_edge(s, li, 1)
+        for d in np.nonzero(A[e])[0]:
+            expert_edges[(li, int(d))] = din.add_edge(li, m + int(d), 1)
+    for d in range(g):
+        din.add_edge(m + d, t, lam)
+    ok = din.max_flow(s, t) == m
+    assignment = np.full(n, -1, dtype=np.int64)
+    if ok:
+        for (li, d), eid in expert_edges.items():
+            if din.cap[eid] == 0:  # saturated forward edge => matched
+                assignment[act[li]] = d
+    return ok, assignment
+
+
+def solve_min_exp_routing(token_counts: np.ndarray, A: np.ndarray):
+    """Returns (lambda_opt, assignment[N] of device ids, -1 for inactive).
+
+    token_counts: [N] tokens per expert; A: [N, G] placement matrix.
+    """
+    token_counts = np.asarray(token_counts)
+    A = np.asarray(A)
+    active = token_counts > 0
+    m = int(active.sum())
+    if m == 0:
+        return 0, np.full(A.shape[0], -1, dtype=np.int64)
+    g = A.shape[1]
+    lo, hi = int(np.ceil(m / g)), m
+    best = None
+    while lo < hi:
+        mid = (lo + hi) // 2
+        ok, assignment = _feasible(active, A, mid)
+        if ok:
+            hi = mid
+            best = assignment
+        else:
+            lo = mid + 1
+    if best is None:
+        ok, best = _feasible(active, A, lo)
+        assert ok, "lambda = num active experts must always be feasible"
+    return lo, best
+
+
+def optimal_lambda(token_counts: np.ndarray, A: np.ndarray) -> int:
+    return solve_min_exp_routing(token_counts, A)[0]

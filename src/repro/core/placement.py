@@ -1,0 +1,130 @@
+"""EPLB-style expert replication + placement (host-side, numpy).
+
+Implements the two-step scheme the paper uses as the fixed substrate for
+*both* routers (§II-C, §VI-A "both METRO and EPLB routing algorithms use
+EPLB's expert placement and replication"):
+
+  1. *Replication*: replica counts proportional to historical expert load
+     (greedy largest-average-reduction, as in deepseek-ai/EPLB).
+  2. *Placement*: balanced packing of replicas onto devices so that the
+     *expected* token load per device is balanced, assuming the
+     token-balanced router splits each expert's tokens evenly across its
+     replicas.
+
+Placement runs host-side every rebalance window; its output tables are
+step inputs to the jitted routers (they are data, not compile consts).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import Placement
+
+
+def replicate_experts(loads: np.ndarray, num_slots: int) -> np.ndarray:
+    """Greedy replica-count assignment (EPLB step 1).
+
+    Gives every expert one replica, then repeatedly grants an extra
+    replica to the expert with the largest per-replica load.  Returns
+    counts[N] with counts.sum() == num_slots.
+    """
+    n = len(loads)
+    if num_slots < n:
+        raise ValueError(f"need >= {n} slots to host {n} experts, got {num_slots}")
+    loads = np.asarray(loads, dtype=np.float64) + 1e-9  # break ties stably
+    counts = np.ones(n, dtype=np.int64)
+    for _ in range(num_slots - n):
+        counts[np.argmax(loads / counts)] += 1
+    return counts
+
+
+def pack_replicas(
+    loads: np.ndarray,
+    counts: np.ndarray,
+    num_devices: int,
+    slots_per_device: int,
+) -> np.ndarray:
+    """Balanced packing of replicas onto devices (EPLB step 2).
+
+    Sorts replicas by per-replica expected load (descending) and greedily
+    places each on the least-loaded device that still has a free slot,
+    avoiding co-locating two replicas of the same expert on one device
+    when possible.  Returns replica_expert[R] in slot-major layout.
+    """
+    n = len(counts)
+    per_replica_load = np.asarray(loads, dtype=np.float64) / np.maximum(counts, 1)
+    replicas = []  # (expert, load)
+    for e in range(n):
+        replicas += [(e, per_replica_load[e])] * int(counts[e])
+    replicas.sort(key=lambda t: (-t[1], t[0]))
+
+    dev_load = np.zeros(num_devices, dtype=np.float64)
+    dev_free = np.full(num_devices, slots_per_device, dtype=np.int64)
+    dev_has = [set() for _ in range(num_devices)]
+    assignment = [[] for _ in range(num_devices)]
+    for e, load in replicas:
+        # prefer devices not already hosting this expert
+        order = np.lexsort((np.arange(num_devices), dev_load))
+        pick = None
+        for d in order:
+            if dev_free[d] > 0 and e not in dev_has[d]:
+                pick = int(d)
+                break
+        if pick is None:  # fall back: allow co-location
+            for d in order:
+                if dev_free[d] > 0:
+                    pick = int(d)
+                    break
+        assert pick is not None, "ran out of slots"
+        assignment[pick].append(e)
+        dev_load[pick] += load
+        dev_free[pick] -= 1
+        dev_has[pick].add(e)
+
+    replica_expert = np.concatenate(
+        [np.asarray(a, dtype=np.int32) for a in assignment])
+    assert replica_expert.shape == (num_devices * slots_per_device,)
+    return replica_expert
+
+
+def build_placement(
+    num_experts: int,
+    num_devices: int,
+    slots_per_device: int,
+    loads: np.ndarray | None = None,
+) -> Placement:
+    """End-to-end EPLB placement for one rebalance window."""
+    R = num_devices * slots_per_device
+    if loads is None:
+        loads = np.ones(num_experts)
+    loads = np.asarray(loads, dtype=np.float64)
+    counts = replicate_experts(loads, R)
+    replica_expert = pack_replicas(loads, counts, num_devices, slots_per_device)
+
+    max_rep = int(counts.max())
+    expert_slots = np.full((num_experts, max_rep), -1, dtype=np.int32)
+    fill = np.zeros(num_experts, dtype=np.int64)
+    for r, e in enumerate(replica_expert):
+        expert_slots[e, fill[e]] = r
+        fill[e] += 1
+    placement = Placement(
+        num_experts=num_experts,
+        num_devices=num_devices,
+        slots_per_device=slots_per_device,
+        replica_expert=replica_expert.astype(np.int32),
+        expert_slots=expert_slots,
+        expert_num_replicas=counts.astype(np.int32),
+        slot_device=(np.arange(R) // slots_per_device).astype(np.int32),
+    )
+    placement.validate()
+    return placement
+
+
+def slots_for_ratio(num_experts: int, num_devices: int,
+                    replication_ratio: float) -> int:
+    """Slots per device for a target replication ratio, rounded up so the
+    slot count is divisible by the EP group size (this is also how the
+    framework absorbs expert counts not divisible by the mesh axis, e.g.
+    qwen2-moe's 60 experts on a 16-way EP group)."""
+    want = int(np.ceil(num_experts * replication_ratio))
+    return int(np.ceil(want / num_devices))

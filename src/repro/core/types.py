@@ -1,0 +1,77 @@
+"""Shared datatypes for expert placement and token routing.
+
+Terminology (matches the paper, §IV-A):
+  N logical experts, G EP ranks (devices in the EP group), R physical
+  replica *slots* with R = G * S (S slots per device, slot-major layout:
+  slot r lives on device r // S).  The binary matrix A[N, G] of the paper
+  is represented sparsely by ``expert_slots`` below.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Static expert->replica-slot placement for one rebalance window.
+
+    All arrays are host numpy; they are passed into jitted step functions
+    as device arrays (they change only at rebalance boundaries, which
+    happen host-side, so they are step *inputs*, not compile-time consts).
+    """
+
+    num_experts: int            # N
+    num_devices: int            # G (EP group size)
+    slots_per_device: int       # S
+    replica_expert: np.ndarray  # [R] int32, logical expert held by each slot
+    expert_slots: np.ndarray    # [N, max_rep] int32, slot ids per expert, -1 pad
+    expert_num_replicas: np.ndarray  # [N] int32
+    slot_device: np.ndarray     # [R] int32 == arange(R) // S
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_devices * self.slots_per_device
+
+    @property
+    def max_replicas(self) -> int:
+        return int(self.expert_slots.shape[1])
+
+    @property
+    def replication_ratio(self) -> float:
+        return self.num_slots / self.num_experts
+
+    def placement_matrix(self) -> np.ndarray:
+        """Dense A[N, G] from the paper's formulation (for tests/oracle)."""
+        A = np.zeros((self.num_experts, self.num_devices), dtype=np.int32)
+        for r, e in enumerate(self.replica_expert):
+            A[int(e), r // self.slots_per_device] = 1
+        return A
+
+    def validate(self) -> None:
+        R = self.num_slots
+        assert self.replica_expert.shape == (R,)
+        assert self.replica_expert.min() >= 0
+        assert self.replica_expert.max() < self.num_experts
+        # every logical expert must be hosted somewhere (no token drops)
+        assert len(np.unique(self.replica_expert)) == self.num_experts
+        for e in range(self.num_experts):
+            slots = self.expert_slots[e]
+            valid = slots[slots >= 0]
+            assert len(valid) == self.expert_num_replicas[e]
+            assert sorted(valid.tolist()) == sorted(
+                np.nonzero(self.replica_expert == e)[0].tolist())
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingStats:
+    """Per-EP-group routing quality metrics (paper Figs. 5d, 8)."""
+
+    max_activated: int          # lambda: max activated replicas per device
+    mean_activated: float
+    activated_per_device: np.ndarray  # [G]
+    max_tokens: int             # token-balance view (what EPLB optimizes)
+    mean_tokens: float
+    tokens_per_device: np.ndarray     # [G]

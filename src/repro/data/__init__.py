@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, make_dataset, data_iterator
+
+__all__ = ["DataConfig", "make_dataset", "data_iterator"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  metro_route.py  — Alg. 1 greedy routing on the scalar core (SMEM
+                    load counters; TPU analogue of the single-SM CUDA
+                    kernel, §V)
+  moe_ffn.py      — grouped expert FFN with activated-expert-only
+                    weight-tile streaming (the memory-bound mechanism
+                    METRO optimizes, §III-B)
+  flash_decode.py — online-softmax decode attention over bf16/fp8 KV
+                    caches (in-register dequant after the block DMA)
+
+ops.py: jitted wrappers (interpret=True on CPU; set
+REPRO_PALLAS_INTERPRET=0 on real TPU).  ref.py: pure-numpy oracles the
+tests sweep against.
+"""

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: single-token decode attention over a (possibly
+fp8-quantized) KV cache.
+
+This is the OTHER memory-bound hot spot of the paper's regime: decode
+latency = weight streaming (moe_ffn kernel) + KV-cache streaming (this
+kernel).  The cache is read block-by-block HBM->VMEM in its STORED
+dtype and dequantized in registers — so an fp8 cache genuinely halves
+the dominant HBM traffic (the claim of EXPERIMENTS §Perf cells 2-3,
+which plain XLA only realizes if the convert fuses).
+
+Grid: (batch, kv_head, seq_blocks) — the seq dimension is innermost and
+sequential, carrying the online-softmax state (m, l, acc) in VMEM
+scratch.  Blocks fully beyond the request's position are masked.
+
+Layout per program: q (1,1,G,hd), k/v (1,1,Sb,hd), out (1,1,G,hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_s: int, n_blocks: int, scale: float):
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # [G, hd]
+    # dequantize in-register: HBM traffic stays at the stored dtype
+    k = k_ref[0, 0].astype(jnp.float32)                 # [Sb, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    offs = sb * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_s), 1)
+    valid = offs <= pos_ref[b]
+    s = jnp.where(valid, s, _NEG)                       # [G, Sb]
+
+    m_prev = m_ref[...]                                 # [G, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                              # [G, Sb]
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(sb == n_blocks - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode_pallas(q, k_cache, v_cache, pos, *, block_s: int = 512,
+                        interpret: bool = True):
+    """q: [B, KV, G, hd]; k/v_cache: [B, KV, S, hd] (bf16 or fp8);
+    pos: [B] int32 (positions > pos are masked). Returns [B, KV, G, hd]
+    in q.dtype."""
+    b, kv, g, hd = q.shape
+    s = k_cache.shape[2]
+    block_s = min(block_s, s)
+    assert s % block_s == 0, (s, block_s)
+    n_blocks = s // block_s
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(_kernel, block_s=block_s,
+                               n_blocks=n_blocks, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, kv, n_blocks),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda i, j, sb, pos: (i, j, 0, 0)),
+                pl.BlockSpec((1, 1, block_s, hd),
+                             lambda i, j, sb, pos: (i, j, sb, 0)),
+                pl.BlockSpec((1, 1, block_s, hd),
+                             lambda i, j, sb, pos: (i, j, sb, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda i, j, sb, pos: (i, j, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(pos.astype(jnp.int32), q, k_cache, v_cache)

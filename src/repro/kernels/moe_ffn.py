@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: grouped expert-FFN matmul with activated-expert-only
+weight streaming.
+
+This is the memory-traffic mechanism METRO optimizes (paper §III-B): in
+the memory-bound regime the MoE layer's runtime is dominated by expert
+weight loads HBM->VMEM.  The kernel's weight BlockSpec is indexed by the
+scalar-prefetched ``tile_group`` map, so a weight tile is DMA'd iff some
+token tile references that expert — non-activated experts' weights are
+*never touched*.  Consecutive tiles of the same group reuse the resident
+VMEM buffer (Pallas skips the DMA when the block index repeats, which
+the sorted layout maximizes).
+
+Semantics == ref.grouped_matmul_ref: rows of token-tile t are multiplied
+by w[tile_group[t]].  The MoE layer guarantees tile alignment via
+build_pair_buffer.
+
+Grid: (m_tiles, f_tiles, k_tiles) — K innermost for accumulation.
+Blocks: x (tm, tk) / w (1, tk, tf) / out (tm, tf), fp32 accumulator in
+VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tile_group, x_ref, w_ref, out_ref, acc_ref, *, k_tiles: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == k_tiles - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_m", "tile_k", "tile_f", "interpret"))
+def grouped_ffn_pallas(x, w, tile_group, *, tile_m: int = 0,
+                       tile_k: int = 512, tile_f: int = 512,
+                       interpret: bool = True):
+    """x: [C, d] (C = n_tiles * tile_m, sorted/tile-aligned); w: [S, d, f];
+    tile_group: [n_tiles] int32. Returns [C, f] in x.dtype."""
+    c, d = x.shape
+    s, _, f = w.shape
+    n_tiles = tile_group.shape[0]
+    tile_m = tile_m or c // n_tiles
+    assert c == n_tiles * tile_m, (c, n_tiles, tile_m)
+    tile_k = min(tile_k, d)
+    tile_f = min(tile_f, f)
+    assert d % tile_k == 0 and f % tile_f == 0, (d, tile_k, f, tile_f)
+    k_tiles = d // tile_k
+
+    grid = (n_tiles, f // tile_f, k_tiles)
+    kernel = functools.partial(_kernel, k_tiles=k_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tile_m, tile_k),
+                             lambda i, j, k, tg: (i, k)),
+                # weight tile selected by the token tile's expert — the
+                # activated-expert-only streaming
+                pl.BlockSpec((1, tile_k, tile_f),
+                             lambda i, j, k, tg: (tg[i], k, j)),
+            ],
+            out_specs=pl.BlockSpec((tile_m, tile_f),
+                                   lambda i, j, k, tg: (i, j)),
+            scratch_shapes=[pltpu.VMEM((tile_m, tile_f), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((c, f), x.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+    )(tile_group.astype(jnp.int32), x, w)

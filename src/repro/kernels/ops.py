@@ -1,0 +1,32 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and should be set
+False on real TPU via REPRO_PALLAS_INTERPRET=0.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.metro_route import metro_route_pallas
+from repro.kernels.moe_ffn import grouped_ffn_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def metro_route(token_counts, expert_slots, *, num_devices: int,
+                slots_per_device: int):
+    return metro_route_pallas(
+        token_counts, expert_slots, num_devices=num_devices,
+        slots_per_device=slots_per_device, interpret=_INTERPRET)
+
+
+def grouped_ffn_matmul(x, w, tile_group):
+    return grouped_ffn_pallas(x, w, tile_group, interpret=_INTERPRET)
+
+
+def flash_decode(q, k_cache, v_cache, pos, block_s: int = 512):
+    return flash_decode_pallas(q, k_cache, v_cache, pos,
+                               block_s=block_s, interpret=_INTERPRET)

@@ -1,0 +1,80 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels.
+
+These define the exact semantics each kernel must reproduce; the kernel
+tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def metro_route_ref(token_counts: np.ndarray, expert_slots: np.ndarray,
+                    *, num_devices: int, slots_per_device: int) -> np.ndarray:
+    """Sequential greedy (paper Alg. 1 with heavy-first deterministic
+    order and (activated, tokens, device-id) lexicographic tie-break —
+    identical to core.routing.route_metro).  Returns expert_slot[N]."""
+    n = len(token_counts)
+    act = np.zeros(num_devices, np.int64)
+    tok = np.zeros(num_devices, np.int64)
+    out = np.full(n, -1, np.int64)
+    order = np.argsort(-np.asarray(token_counts), kind="stable")
+    for e in order:
+        t = int(token_counts[e])
+        if t <= 0:
+            continue
+        slots = expert_slots[e]
+        best = None
+        for s in slots:
+            if s < 0:
+                continue
+            d = s // slots_per_device
+            key = (act[d], tok[d], d, s)
+            if best is None or key < best[0]:
+                best = (key, int(s), int(d))
+        assert best is not None
+        _, s_star, d_star = best
+        out[e] = s_star
+        act[d_star] += 1
+        tok[d_star] += t
+    return out
+
+
+def grouped_matmul_ref(x: np.ndarray, w: np.ndarray,
+                       tile_group: np.ndarray) -> np.ndarray:
+    """Tile-wise grouped matmul: rows of tile t use weights w[tile_group[t]].
+
+    x: [C, d]; w: [S, d, f]; tile_group: [C // tile]."""
+    c, d = x.shape
+    n_tiles = len(tile_group)
+    tile = c // n_tiles
+    out = np.zeros((c, w.shape[2]), np.float32)
+    xf = np.asarray(x, np.float32)
+    wf = np.asarray(w, np.float32)
+    for t in range(n_tiles):
+        sl = slice(t * tile, (t + 1) * tile)
+        out[sl] = xf[sl] @ wf[int(tile_group[t])]
+    return out
+
+
+def flash_decode_ref(q: np.ndarray, k_cache: np.ndarray,
+                     v_cache: np.ndarray, pos: np.ndarray) -> np.ndarray:
+    """Oracle for the decode-attention kernel.
+
+    q: [B, KV, G, hd]; caches [B, KV, S, hd]; positions > pos masked."""
+    b, kv, g, hd = q.shape
+    s = k_cache.shape[2]
+    qf = np.asarray(q, np.float32)
+    kf = np.asarray(k_cache, np.float32)
+    vf = np.asarray(v_cache, np.float32)
+    out = np.zeros_like(qf)
+    scale = 1.0 / np.sqrt(hd)
+    for i in range(b):
+        mask = np.arange(s) <= pos[i]
+        for j in range(kv):
+            logits = qf[i, j] @ kf[i, j].T * scale        # [G, S]
+            logits = np.where(mask[None, :], logits, -1e30)
+            logits -= logits.max(axis=-1, keepdims=True)
+            p = np.exp(logits)
+            p /= p.sum(axis=-1, keepdims=True)
+            out[i, j] = p @ vf[i, j]
+    return out

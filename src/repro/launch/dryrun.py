@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory/cost/collective analysis.
+
+The two lines above MUST run before any jax import — jax locks the
+device count at first init.  Do not set that flag anywhere global.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+      --shape decode_32k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--skip-existing]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, cell_applicable,
+                           get_config, input_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as RL
+from repro.launch.steps import (
+    StepConfig, default_slots_per_device, make_placement, make_prefill_step,
+    make_serve_step, make_train_step, sanitize_specs, serve_cache_pspecs,
+    train_shardings, tree_named, batch_pspecs, serve_shardings)
+from repro.models import lm as LM
+from repro.sharding.policy import make_dist, param_pspecs
+from repro.training.optimizer import adamw_init
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _specs_tree(tree):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               *, replication_ratio: float = 1.25, algo: str = "metro",
+               ep_mode: str = "paper", attn_chunk: int = 1024,
+               remat: bool = True, microbatches: int = 0,
+               remat_policy: str = "dots_no_batch",
+               kv_dtype: str = "bfloat16"):
+    """Lower + compile one cell; returns the artifact dict."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    okay, why = cell_applicable(cfg, shape)
+    if not okay:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    # training uses no serving replication (R = next multiple of EP);
+    # serving replicates per the paper (default 1.25x)
+    ratio = 1.0 if shape.kind == "train" else replication_ratio
+    spd = default_slots_per_device(cfg, mesh.shape["model"], ratio)
+    dist = make_dist(mesh, slots_per_device=spd, ep_mode=ep_mode)
+    # grad-accumulate so one microbatch ~= 1 sequence per data row
+    dp = chips // mesh.shape["model"]
+    micro = microbatches or (
+        max(shape.global_batch // dp, 1) if shape.kind == "train" else 1)
+    sc = StepConfig(cfg=cfg, dist=dist, algo_decode=algo,
+                    replication_ratio=ratio,
+                    attn_chunk=attn_chunk, remat=remat,
+                    microbatches=micro, remat_policy=remat_policy,
+                    kv_dtype=kv_dtype,
+                    long_context=(shape_name == "long_500k"))
+
+    placement = make_placement(sc)
+    re_ = placement.replica_expert if placement else None
+    params_shape = jax.eval_shape(
+        lambda: LM.init_lm(cfg, jax.random.PRNGKey(0), dist,
+                           replica_expert=re_))
+    from repro.launch.steps import step_pspecs
+    pspecs = step_pspecs(sc, params_shape, fsdp=False)
+    routing_shape = (
+        jax.eval_shape(lambda: LM.build_lm_routing(cfg, placement))
+        if cfg.is_moe else {})
+
+    binputs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(lambda: adamw_init(params_shape, sc.opt))
+        bspecs = batch_pspecs(cfg, dist, binputs)
+        in_sh, out_sh = train_shardings(sc, params_shape, opt_shape, bspecs)
+        step = make_train_step(sc)
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=(0, 1)).lower(
+            params_shape, opt_shape, binputs, routing_shape)
+    elif shape.kind == "prefill":
+        bspecs = batch_pspecs(cfg, dist, binputs)
+        cache_shape = jax.eval_shape(
+            lambda: LM.init_cache(cfg, dist, shape.global_batch,
+                                  shape.seq_len))
+        cspecs = sanitize_specs(
+            serve_cache_pspecs(cfg, dist, sc.long_context), cache_shape,
+            dist)
+        step = make_prefill_step(sc)
+        in_sh = (tree_named(dist, pspecs), tree_named(dist, bspecs),
+                 tree_named(dist, cspecs), None)
+        out_sh = (None, tree_named(dist, cspecs), None)
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(
+            params_shape, binputs, cache_shape, routing_shape)
+    else:  # decode
+        cache_shape = jax.eval_shape(
+            lambda: LM.init_cache(cfg, dist, shape.global_batch,
+                                  shape.seq_len,
+                                  dtype=jnp.dtype(sc.kv_dtype)))
+        cspecs = sanitize_specs(
+            serve_cache_pspecs(cfg, dist, sc.long_context), cache_shape,
+            dist)
+        in_sh, out_sh = serve_shardings(sc, params_shape, cspecs,
+                                        shape.global_batch)
+        step = make_serve_step(sc)
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=(3,)).lower(
+            params_shape, binputs["tokens"], binputs["pos"], cache_shape,
+            routing_shape)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # --- analyses ---
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # CPU backend may not implement it
+        mem_d = {"error": str(e)}
+    try:
+        cost_list = compiled.cost_analysis()
+        cost = cost_list[0] if isinstance(cost_list, (list, tuple)) \
+            else cost_list
+        cost = dict(cost)
+    except Exception as e:
+        cost = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    from repro.launch.hlo_cost import analyze_hlo
+    hc = analyze_hlo(hlo)
+    mf = RL.model_flops_estimate(cfg, shape)
+    # trip-count-aware per-device costs from the HLO walker (XLA's own
+    # cost_analysis counts while bodies once — useless under scan)
+    terms = RL.roofline_terms(
+        {"flops": hc.flops, "bytes accessed": hc.dot_bytes},
+        hc.collective_bytes, chips, mf).as_dict()
+    terms["while_loops"] = hc.while_loops
+    terms["unknown_trip_loops"] = hc.unknown_trip_loops
+    coll = {k: float(v) for k, v in hc.collective_bytes.items()}
+
+    art = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "status": "ok",
+        "replication_ratio": placement.replication_ratio if placement else None,
+        "slots_per_device": spd if cfg.is_moe else None,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "collective_bytes": coll,
+        "roofline": terms,
+        "params": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--replication-ratio", type=float, default=1.25)
+    ap.add_argument("--algo", default="metro", choices=["metro", "eplb",
+                                                        "single"])
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--remat-policy", default="dots_no_batch")
+    ap.add_argument("--kv-dtype", default="bfloat16")
+    ap.add_argument("--out-dir", default=str(ART))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s) for a in ASSIGNED_ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch and --shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or
+                               (args.all and not args.multi_pod)) else \
+        [args.multi_pod]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = out_dir / f"{tag}.json"
+            if args.skip_existing and path.exists():
+                print(f"[skip-existing] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                art = lower_cell(arch, shape, mp,
+                                 replication_ratio=args.replication_ratio,
+                                 algo=args.algo,
+                                 microbatches=args.microbatches,
+                                 remat_policy=args.remat_policy,
+                                 kv_dtype=args.kv_dtype)
+            except Exception as e:
+                art = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": str(e),
+                       "traceback": traceback.format_exc()}
+                failures += 1
+            path.write_text(json.dumps(art, indent=2, default=str))
+            status = art["status"]
+            extra = ""
+            if status == "ok":
+                r = art.get("roofline", {})
+                extra = (f" compile={art['compile_s']}s "
+                         f"bottleneck={r.get('bottleneck')}")
+                mem = art["memory_analysis"]
+                if "temp_size_in_bytes" in mem:
+                    per_dev = (mem.get("argument_size_in_bytes", 0)
+                               + mem.get("temp_size_in_bytes", 0))
+                    extra += f" bytes/dev={per_dev / 1e9:.2f}GB"
+            elif status == "error":
+                extra = " " + art["error"][:200]
+            print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Roofline report generator: artifacts/dryrun/*.json -> markdown table.
+
+Per (arch x shape x mesh): the three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS (useful fraction), and the roofline
+fraction = model-flops-time / dominant-term-time (how close the step is
+to the hardware bound given its useful work).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.launch.roofline import PEAK_FLOPS
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def load_all(art_dir=ART):
+    rows = []
+    for p in sorted(Path(art_dir).glob("*.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def roofline_fraction(r) -> float:
+    """model_flops / (chips*peak) vs the dominant term: the fraction of
+    the roofline-limited step time that is useful model compute."""
+    rf = r.get("roofline", {})
+    if "compute_s" not in rf:
+        return 0.0
+    ideal = rf["model_flops"] / (r["chips"] * PEAK_FLOPS)
+    dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+    return ideal / dom if dom else 0.0
+
+
+def one_liner(r) -> str:
+    rf = r.get("roofline", {})
+    mem = r.get("memory_analysis", {})
+    per_dev = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 1e9
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rf.get('compute_s', 0)*1e3:.2f} | "
+            f"{rf.get('memory_s', 0)*1e3:.2f} | "
+            f"{rf.get('collective_s', 0)*1e3:.2f} | "
+            f"{rf.get('bottleneck','-')} | "
+            f"{rf.get('useful_fraction', 0):.3f} | "
+            f"{roofline_fraction(r):.3f} | {per_dev:.1f} |")
+
+
+def main():
+    rows = load_all(sys.argv[1] if len(sys.argv) > 1 else ART)
+    print("| arch | shape | mesh | compute ms | memory ms | collective "
+          "ms | bottleneck | useful (6ND/HLO) | roofline frac | GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    skipped = []
+    for r in rows:
+        if r["status"] == "skipped":
+            skipped.append(r)
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"ERROR: {r.get('error','')[:60]} ||||||||")
+            continue
+        print(one_liner(r))
+    print()
+    for r in skipped:
+        print(f"- skipped {r['arch']} x {r['shape']} ({r['mesh']}): "
+              f"{r['reason']}")
+
+
+if __name__ == "__main__":
+    main()

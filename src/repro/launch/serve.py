@@ -1,0 +1,60 @@
+"""Serving launcher: run the continuous-batching engine on a synthetic
+request stream.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b \
+      --reduced --requests 8 --algo metro
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import build_placement, slots_for_ratio
+from repro.models import init_lm
+from repro.serving import EngineConfig, ServingEngine
+from repro.sharding.policy import make_dist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--algo", default="metro",
+                    choices=["metro", "eplb", "single"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--replication", type=float, default=1.25)
+    ap.add_argument("--rebalance-every", type=int, default=64)
+    ap.add_argument("--ep", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    spd = (slots_for_ratio(cfg.num_experts, args.ep, args.replication)
+           if cfg.is_moe else 1)
+    dist = make_dist(None, ep_size=args.ep, slots_per_device=spd)
+    placement = (build_placement(cfg.num_experts, args.ep, spd)
+                 if cfg.is_moe else None)
+    params = init_lm(cfg, jax.random.PRNGKey(args.seed), dist,
+                     replica_expert=placement.replica_expert
+                     if placement else None)
+    eng = ServingEngine(cfg, dist, params, EngineConfig(
+        max_batch=args.max_batch, max_len=args.max_len,
+        decode_algo=args.algo, rebalance_every=args.rebalance_every,
+        replication_ratio=args.replication))
+    rng = np.random.default_rng(args.seed)
+    for _ in range(args.requests):
+        n = int(rng.integers(4, min(32, args.max_len // 2)))
+        eng.submit(rng.integers(0, cfg.vocab_size, n), args.gen)
+    summary = eng.run()
+    for k, v in summary.items():
+        print(f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

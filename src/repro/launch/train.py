@@ -1,0 +1,68 @@
+"""Training launcher.
+
+Local CPU run (reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-moe-a2.7b \
+      --reduced --steps 50
+
+Production: run under your TPU job launcher with jax.distributed
+initialized per host; the mesh and shardings come from launch.steps.
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.core import slots_for_ratio
+from repro.data.pipeline import DataConfig
+from repro.launch.steps import StepConfig
+from repro.sharding.policy import make_dist
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized variant of the arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ep", type=int, default=4,
+                    help="virtual EP group size on CPU")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use make_production_mesh (requires devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    if args.production_mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        spd = (slots_for_ratio(cfg.num_experts, mesh.shape["model"], 1.0)
+               if cfg.is_moe else 1)
+        dist = make_dist(mesh, slots_per_device=spd)
+    else:
+        spd = (slots_for_ratio(cfg.num_experts, args.ep, 1.0)
+               if cfg.is_moe else 1)
+        dist = make_dist(None, ep_size=args.ep, slots_per_device=spd)
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                    global_batch=args.global_batch)
+    tc = TrainConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                     ckpt_dir=args.ckpt_dir)
+    sc = StepConfig(cfg=cfg, dist=dist, remat=bool(args.production_mesh),
+                    fsdp=bool(args.production_mesh),
+                    microbatches=args.microbatches,
+                    opt=AdamWConfig(lr=args.lr))
+    train(cfg, dist, dc, tc, sc=sc)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model zoo: composable layers + per-family assemblies."""
+from repro.models.lm import (
+    init_lm, apply_lm, lm_loss, init_cache, build_lm_routing, cache_pspec)
+from repro.models.moe import moe_ffn, init_moe, routing_tables, gating
+from repro.models import layers, mamba, encdec
+
+__all__ = [
+    "init_lm", "apply_lm", "lm_loss", "init_cache", "build_lm_routing",
+    "cache_pspec", "moe_ffn", "init_moe", "routing_tables", "gating",
+    "layers", "mamba", "encdec",
+]

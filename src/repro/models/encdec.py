@@ -1,0 +1,183 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Encoder input is precomputed frame embeddings [B, F, d] (the assignment
+stubs the mel-spectrogram/conv frontend).  Decoder layers: causal
+self-attention (+ KV cache in decode) -> cross-attention over encoder
+output -> GELU MLP.  Whisper uses plain LayerNorm and learned positions;
+we use parametric LayerNorm and sinusoidal positions on the stub.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _ln_params(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def _ln(params, x):
+    return L.layer_norm(x, params["scale"], params["bias"])
+
+
+def _sinusoid(length: int, d: int):
+    pos = np.arange(length)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)
+
+
+def init_encdec(cfg: ModelConfig, key, dist):
+    d, v = cfg.d_model, cfg.vocab_size
+    keys = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm1": _ln_params(d),
+                "attn": L.init_attention(cfg, k1, tp=dist.ep_size),
+                "norm2": _ln_params(d),
+                "mlp": L.init_mlp(cfg, k2)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"norm1": _ln_params(d),
+                "self_attn": L.init_attention(cfg, k1, tp=dist.ep_size),
+                "norm2": _ln_params(d),
+                "cross_attn": L.init_attention(cfg, k2, tp=dist.ep_size),
+                "norm3": _ln_params(d),
+                "mlp": L.init_mlp(cfg, k3)}
+
+    ekeys = jax.random.split(keys[0], cfg.encoder_layers)
+    dkeys = jax.random.split(keys[1], cfg.num_layers)
+    params = {
+        "embed": jax.random.normal(keys[2], (v, d), jnp.float32) * 0.02,
+        "unembed": jax.random.normal(keys[3], (d, v), jnp.float32)
+        / np.sqrt(d),
+        "enc_blocks": jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[enc_layer(k) for k in ekeys]),
+        "dec_blocks": jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[dec_layer(k) for k in dkeys]),
+        "enc_norm": _ln_params(d),
+        "dec_norm": _ln_params(d),
+    }
+    return params
+
+
+def run_encoder(cfg: ModelConfig, dist, params, frames):
+    """frames: [B, F, d] stubbed embeddings -> encoder output [B, F, d]."""
+    b, f, d = frames.shape
+    dims = L.attn_dims(cfg, dist.ep_size)
+    x = frames.astype(jnp.bfloat16) + _sinusoid(f, d).astype(jnp.bfloat16)
+    x = dist.shard(x, dist.dp_axes, None, None)
+
+    def body(x, bp):
+        h = _ln(bp["norm1"], x)
+        x = x + L.attention_bidir(cfg, bp["attn"], h, dims=dims)
+        h = _ln(bp["norm2"], x)
+        x = x + L.apply_mlp(cfg, bp["mlp"], h, dist=dist)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return _ln(params["enc_norm"], x)
+
+
+def init_encdec_cache(cfg: ModelConfig, dist, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Decoder self-attn caches + cross-attn K/V (filled at prefill)."""
+    dims = L.attn_dims(cfg, dist.ep_size)
+    ld = cfg.num_layers
+    kv_self = jnp.zeros((ld, batch, dims.kv, max_len, dims.head_dim), dtype)
+    kv_cross = jnp.zeros(
+        (ld, batch, dims.kv, cfg.encoder_frames, dims.head_dim), dtype)
+    return {"self_k": kv_self, "self_v": kv_self,
+            "cross_k": kv_cross, "cross_v": kv_cross}
+
+
+def apply_encdec(cfg: ModelConfig, dist, params, *, tokens, embeds=None,
+                 pos=None, cache=None, mode="train", chunk: int = 1024,
+                 frames=None):
+    """Returns (logits, new_cache, stats) mirroring apply_lm."""
+    from repro.models.lm import cast_params
+    params = cast_params(params)
+    d = cfg.d_model
+    dims = L.attn_dims(cfg, dist.ep_size)
+    stats = {"aux_loss": jnp.zeros((), jnp.float32),
+             "max_activated": jnp.zeros((), jnp.float32),
+             "mean_activated": jnp.zeros((), jnp.float32),
+             "max_tokens": jnp.zeros((), jnp.float32),
+             "expert_hist": jnp.zeros((1,), jnp.float32)}
+
+    if mode in ("train", "prefill"):
+        assert frames is not None or embeds is not None
+        enc = run_encoder(cfg, dist, params,
+                          frames if frames is not None else embeds)
+        x = params["embed"][tokens].astype(jnp.bfloat16)
+        b, s = tokens.shape
+        x = x + _sinusoid(s, d).astype(jnp.bfloat16)
+        x = dist.shard(x, dist.dp_axes, None, None)
+
+        def body(x, bp):
+            h = _ln(bp["norm1"], x)
+            y, kv = L.attention_train(cfg, bp["self_attn"], h, dims=dims,
+                                      chunk=chunk, rope=False, dist=dist,
+                                      return_kv=(mode == "prefill"))
+            x = x + y
+            h = _ln(bp["norm2"], x)
+            ckv = L.cross_kv(cfg, bp["cross_attn"], enc, dims=dims)
+            x = x + L.attention_cross(cfg, bp["cross_attn"], h, ckv,
+                                      dims=dims)
+            h = _ln(bp["norm3"], x)
+            x = x + L.apply_mlp(cfg, bp["mlp"], h, dist=dist)
+            out = (kv, (ckv["k"], ckv["v"])) if mode == "prefill" else None
+            return x, out
+
+        x, caches = jax.lax.scan(body, x, params["dec_blocks"])
+        x = _ln(params["dec_norm"], x)
+        logits = x @ params["unembed"].astype(x.dtype)
+        new_cache = None
+        if mode == "prefill":
+            (ks, vs), (ck, cv) = caches
+            max_len = cache["self_k"].shape[3] if cache else s
+            pad = max_len - s
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+            new_cache = {"self_k": ks.astype(jnp.bfloat16),
+                         "self_v": vs.astype(jnp.bfloat16),
+                         "cross_k": ck.astype(jnp.bfloat16),
+                         "cross_v": cv.astype(jnp.bfloat16)}
+        return logits, new_cache, stats
+
+    # decode: one token per request
+    assert cache is not None and pos is not None
+    x = params["embed"][tokens].astype(jnp.bfloat16)   # [B, 1, d]
+    b = tokens.shape[0]
+    pe_table = _sinusoid(cache["self_k"].shape[3], d)
+    x = x + pe_table[pos][:, None].astype(jnp.bfloat16)
+
+    def body(x, bp_and_cache):
+        bp, ck, cv, sk, sv = bp_and_cache
+        h = _ln(bp["norm1"], x)
+        y, new_kv = L.attention_decode(cfg, bp["self_attn"], h,
+                                       {"k": sk, "v": sv}, pos,
+                                       dims=dims, rope=False, dist=dist)
+        x = x + y
+        h = _ln(bp["norm2"], x)
+        x = x + L.attention_cross(cfg, bp["cross_attn"], h,
+                                  {"k": ck, "v": cv}, dims=dims)
+        h = _ln(bp["norm3"], x)
+        x = x + L.apply_mlp(cfg, bp["mlp"], h, dist=dist)
+        return x, (new_kv["k"], new_kv["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["cross_k"], cache["cross_v"],
+                  cache["self_k"], cache["self_v"]))
+    x = _ln(params["dec_norm"], x)
+    logits = x @ params["unembed"].astype(x.dtype)
+    new_cache = dict(cache, self_k=nk, self_v=nv)
+    return logits, new_cache, stats

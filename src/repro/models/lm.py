@@ -1,0 +1,353 @@
+"""Decoder-only LM assembly for every assigned architecture family.
+
+Layer stacks are a `lax.scan` over *pattern blocks*: each block holds one
+period of the config's layer pattern (e.g. gemma3's [5x local, 1x global],
+jamba's [mamba x3, attn, mamba x3 + MoE interleave]), with parameters
+stacked on a leading n_blocks axis — keeping the HLO O(period) regardless
+of depth (95-layer deepseek compiles as fast as 16-layer olmo).
+
+Modes:
+  train   — full causal pass, logits for loss; no cache.
+  prefill — causal pass that also *fills* the KV/SSM caches.
+  decode  — single token against caches (the paper's memory-bound phase);
+            MoE layers run in features mode with METRO routing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.core.types import Placement
+from repro.sharding.policy import Dist
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, key, dist: Dist, mixer: str, ffn: str,
+                replica_expert):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": L.init_norm(cfg, ks[0])}
+    if mixer.startswith("attn"):
+        p["attn"] = L.init_attention(cfg, ks[1], tp=dist.ep_size)
+    elif mixer == "mamba":
+        p["mamba"] = M.init_mamba(cfg, ks[1])
+    if ffn == "dense":
+        p["norm2"] = L.init_norm(cfg, ks[2])
+        p["mlp"] = L.init_mlp(cfg, ks[3])
+    elif ffn == "moe":
+        p["norm2"] = L.init_norm(cfg, ks[2])
+        p["moe"] = MOE.init_moe(cfg, ks[3], dist, replica_expert)
+    return p
+
+
+def init_lm(cfg: ModelConfig, key, dist: Dist,
+            replica_expert: Optional[np.ndarray] = None):
+    """Full parameter pytree (fp32 master). MoE layers need the physical
+    replica layout (replica_expert from the placement)."""
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        return encdec.init_encdec(cfg, key, dist)
+    kinds = cfg.layer_kinds()
+    n_blocks = cfg.num_layers // len(kinds)
+    k_emb, k_blocks, k_norm, k_head = jax.random.split(key, 4)
+    d, v = cfg.d_model, cfg.vocab_size
+    params = {}
+    # even embeddings-mode archs (VLM stub) keep a token table: prefill
+    # consumes precomputed patch embeddings, decode embeds generated text
+    params["embed"] = jax.random.normal(k_emb, (v, d), jnp.float32) * 0.02
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(
+            k_head, (d, v), jnp.float32) / np.sqrt(d)
+    params["final_norm"] = L.init_norm(cfg, k_norm)
+
+    bkeys = jax.random.split(k_blocks, n_blocks)
+
+    def one_block(bk):
+        lkeys = jax.random.split(bk, len(kinds))
+        return {f"l{i}": _init_layer(cfg, lkeys[i], dist, mixer, ffn,
+                                     replica_expert)
+                for i, (mixer, ffn) in enumerate(kinds)}
+
+    blocks = [one_block(bk) for bk in bkeys]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return params
+
+
+def build_lm_routing(cfg: ModelConfig, placement: Placement,
+                     table_width: Optional[int] = None):
+    """Per-layer routing tables, stacked over blocks (same placement for
+    every MoE layer by default; the serving engine may rebalance
+    per-layer by stacking different placements)."""
+    if not cfg.is_moe:
+        return {}
+    kinds = cfg.layer_kinds()
+    n_blocks = cfg.num_layers // len(kinds)
+    t = MOE.routing_tables(placement, table_width)
+    out = {}
+    for i, (_, ffn) in enumerate(kinds):
+        if ffn == "moe":
+            out[f"l{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_blocks,) + a.shape), t)
+    return out
+
+
+# ----------------------------------------------------------------------
+# caches
+# ----------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, dist: Dist, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Decode caches for all layers, stacked over blocks."""
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        return encdec.init_encdec_cache(cfg, dist, batch, max_len, dtype)
+    kinds = cfg.layer_kinds()
+    n_blocks = cfg.num_layers // len(kinds)
+    cache = {}
+    for i, (mixer, _) in enumerate(kinds):
+        if mixer == "attn_full":
+            c = L.init_kv_cache(cfg, batch, max_len, None, dtype,
+                                tp=dist.ep_size)
+        elif mixer == "attn_swa":
+            c = L.init_kv_cache(cfg, batch, max_len, cfg.sliding_window,
+                                dtype, tp=dist.ep_size)
+        elif mixer == "mamba":
+            c = M.init_mamba_cache(cfg, batch, dtype)
+        else:
+            continue
+        cache[f"l{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_blocks,) + a.shape), c)
+    return cache
+
+
+def cache_pspec(cfg: ModelConfig, dist: Dist, long_context: bool = False):
+    """PartitionSpecs for the cache pytree (for dry-run in_shardings).
+
+    KV: heads sharded over the TP axis; for long-context cells the
+    sequence dim is additionally sharded over the data axes.
+    Mamba: channels over TP.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.models.layers import attn_dims
+    kinds = cfg.layer_kinds()
+    ax, dp = dist.tp_axis, dist.dp_axes
+    kv_ok = (dist.mesh is not None and ax is not None
+             and attn_dims(cfg, dist.ep_size).kv % dist.ep_size == 0)
+    specs = {}
+    for i, (mixer, _) in enumerate(kinds):
+        if mixer.startswith("attn"):
+            # batch over DP; long-context (batch=1) shards the KV
+            # sequence over the data axes instead (DESIGN.md §7).
+            # kv heads shard over TP when divisible, else the sequence
+            # dim takes the TP axis (no head padding — see attn_dims).
+            batch_ax = None if long_context else dp
+            head_ax = ax if kv_ok else None
+            if long_context and mixer == "attn_full":
+                seq_ax = dp if kv_ok else tuple(dp) + (ax,)
+            else:
+                seq_ax = None if kv_ok else ax
+            s = P(None, batch_ax, head_ax, seq_ax, None)
+            specs[f"l{i}"] = {"k": s, "v": s}
+        elif mixer == "mamba":
+            batch_ax = None if long_context else dp
+            specs[f"l{i}"] = {"conv": P(None, batch_ax, None, ax),
+                              "h": P(None, batch_ax, ax, None)}
+    return specs
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+
+
+def cast_params(params, dtype=jnp.bfloat16):
+    """Cast float params to the compute dtype (mixed-precision fwd);
+    numerically-sensitive leaves are re-upcast inside their layers."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype)
+        if hasattr(a, "dtype") and a.dtype == jnp.float32 else a, params)
+
+
+def _mixer_apply(cfg, dist, lp, mixer, x, *, mode, lc, pos, chunk):
+    """Apply attention/mamba; returns (y, new_layer_cache or {})."""
+    window = cfg.sliding_window if mixer == "attn_swa" else None
+    if mixer == "mamba":
+        if mode == "decode":
+            return M.mamba_decode(cfg, lp["mamba"], x, lc, dist=dist)
+        y, st = M.mamba_train(cfg, lp["mamba"], x, dist=dist,
+                              return_state=(mode == "prefill"))
+        return y, (st if mode == "prefill" else {})
+    dims = L.attn_dims(cfg, dist.ep_size)
+    # attention
+    if mode == "decode":
+        return L.attention_decode(cfg, lp["attn"], x, lc, pos,
+                                  window=window, dims=dims, dist=dist)
+    y, kv = L.attention_train(cfg, lp["attn"], x, window=window, dims=dims,
+                              chunk=chunk, dist=dist,
+                              return_kv=(mode == "prefill"))
+    if mode != "prefill":
+        return y, {}
+    # fill the cache buffers from the prefill K/V
+    k, v = kv
+    s = x.shape[1]
+    buf_k, buf_v = lc["k"], lc["v"]
+    w = buf_k.shape[2]
+    if window and w <= s:
+        kw, vw = k[:, :, -w:], v[:, :, -w:]
+        slots = (jnp.arange(s - w, s) % w)
+        new_k = buf_k.at[:, :, slots].set(kw.astype(buf_k.dtype))
+        new_v = buf_v.at[:, :, slots].set(vw.astype(buf_v.dtype))
+    else:
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            buf_k, k.astype(buf_k.dtype), 0, axis=2)
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            buf_v, v.astype(buf_v.dtype), 0, axis=2)
+    return y, {"k": new_k, "v": new_v}
+
+
+_REMAT_POLICIES = {
+    "dots_no_batch": lambda: jax.checkpoint_policies
+    .dots_with_no_batch_dims_saveable,
+    "dots": lambda: jax.checkpoint_policies.everything_saveable,
+    "nothing": lambda: jax.checkpoint_policies.nothing_saveable,
+    "save_moe": lambda: jax.checkpoint_policies.save_only_these_names(
+        "moe_h", "moe_y"),
+}
+
+
+def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
+             embeds=None, pos=None, cache=None, routing=None,
+             mode: str = "train", algo: str = "eplb",
+             moe_impl: str = "ragged", chunk: int = 1024,
+             remat: bool = False, capacity_factor: float = 1.25,
+             use_pallas_route: bool = False, frames=None,
+             compute_dtype=jnp.bfloat16, remat_policy: str = "dots_no_batch"):
+    """Returns (logits, new_cache, stats)."""
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        return encdec.apply_encdec(
+            cfg, dist, params, tokens=tokens, embeds=embeds, pos=pos,
+            cache=cache, mode=mode, chunk=chunk, frames=frames)
+
+    kinds = cfg.layer_kinds()
+    n_blocks = cfg.num_layers // len(kinds)
+    dp = dist.dp_axes
+    params = cast_params(params, compute_dtype)
+
+    if cfg.input_mode == "embeddings" and mode != "decode":
+        x = embeds
+    else:
+        x = params["embed"][tokens]
+    x = x.astype(compute_dtype)
+    x = dist.shard(x, dp, None, None)
+
+    routing = routing or {}
+    cache = cache or {}
+    moe_mode = "features" if mode == "decode" else "tokens"
+
+    def block_body(x, blk):
+        bp, bc, brt = blk
+        new_bc = {}
+        stats_l = []
+        for i, (mixer, ffn) in enumerate(kinds):
+            li = f"l{i}"
+            lp = bp[li]
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            y, nc = _mixer_apply(cfg, dist, lp, mixer, h, mode=mode,
+                                 lc=bc.get(li), pos=pos, chunk=chunk)
+            if nc:
+                new_bc[li] = nc
+            x = x + y
+            if ffn != "none":
+                h2 = L.apply_norm(cfg, lp["norm2"], x)
+                if ffn == "dense":
+                    y2 = L.apply_mlp(cfg, lp["mlp"], h2, dist=dist)
+                else:
+                    if moe_mode == "features":
+                        h2f = h2[:, 0]          # [B, 1, d] -> [B, d]
+                        y2, st = MOE.moe_ffn(
+                            cfg, dist, lp["moe"], brt[li], h2f, algo=algo,
+                            impl=moe_impl, mode="features",
+                            capacity_factor=capacity_factor,
+                            use_pallas_route=use_pallas_route)
+                        y2 = y2[:, None]
+                    else:
+                        y2, st = MOE.moe_ffn(
+                            cfg, dist, lp["moe"], brt[li], h2, algo=algo,
+                            impl=moe_impl, mode="tokens",
+                            capacity_factor=capacity_factor,
+                            use_pallas_route=use_pallas_route)
+                    stats_l.append(st)
+                x = x + y2.astype(x.dtype)
+        if stats_l:
+            stats = jax.tree.map(lambda *v: jnp.stack(v), *stats_l)
+        else:
+            stats = {}
+        return x, (new_bc, stats)
+
+    body = block_body
+    if remat and mode == "train":
+        body = jax.checkpoint(
+            block_body, policy=_REMAT_POLICIES[remat_policy]())
+
+    x, (new_cache, stats) = jax.lax.scan(
+        body, x, (params["blocks"], cache, routing))
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        unembed = params["embed"].T
+    else:
+        unembed = params["unembed"]
+    logits = x @ unembed.astype(x.dtype)
+    logits = dist.shard(logits, dp, None, dist.tp_axis)
+
+    # reduce per-(block, layer) stats
+    if stats:
+        stats = {
+            "aux_loss": jnp.mean(stats["aux_loss"]),
+            "max_activated": jnp.max(stats["max_activated"]),
+            "mean_activated": jnp.mean(stats["mean_activated"]),
+            "max_tokens": jnp.max(stats["max_tokens"]),
+            # summed over layers -> rebalance signal [N]
+            "expert_hist": jnp.sum(stats["expert_hist"], axis=(0, 1)),
+        }
+    else:
+        stats = {"aux_loss": jnp.zeros((), jnp.float32),
+                 "max_activated": jnp.zeros((), jnp.float32),
+                 "mean_activated": jnp.zeros((), jnp.float32),
+                 "max_tokens": jnp.zeros((), jnp.float32),
+                 "expert_hist": jnp.zeros((max(cfg.num_experts, 1),),
+                                          jnp.float32)}
+    return logits, new_cache, stats
+
+
+def lm_loss(cfg: ModelConfig, dist: Dist, params, batch, *, routing=None,
+            algo: str = "eplb", moe_impl: str = "ragged",
+            remat: bool = False, aux_coef: float = 0.01,
+            chunk: int = 1024, remat_policy: str = "dots_no_batch"):
+    """Mean next-token NLL + MoE aux loss. Labels are pre-shifted."""
+    logits, _, stats = apply_lm(
+        cfg, dist, params, tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"), frames=batch.get("frames"),
+        routing=routing, mode="train",
+        algo=algo, moe_impl=moe_impl, remat=remat, chunk=chunk,
+        remat_policy=remat_policy)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(lse - ll)
+    loss = nll + aux_coef * stats["aux_loss"]
+    stats = dict(stats, nll=nll)
+    return loss, stats

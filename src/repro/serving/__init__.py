@@ -1,0 +1,4 @@
+from repro.serving.engine import ServingEngine, EngineConfig, Request
+from repro.serving.slo import SLOTracker
+
+__all__ = ["ServingEngine", "EngineConfig", "Request", "SLOTracker"]

@@ -1,0 +1,277 @@
+"""Continuous-batching serving engine with prefill/decode co-deployment.
+
+The paper's real-system setting (§VI-A): prefill and decode co-deployed,
+EPLB expert placement/replication as the fixed substrate, token routing
+selectable per phase — METRO for the memory-bound decode phase, EPLB's
+round-robin for prefill (exactly the paper's deployment).
+
+Engine loop per iteration (vLLM-style):
+  1. admit waiting requests into free slots (up to max_batch),
+  2. if any admitted this round: run one (chunked) prefill per request,
+  3. run one decode step for the whole active batch,
+  4. retire finished requests; every ``rebalance_every`` decode steps,
+     recompute EPLB placement from the observed expert-load EWMA and
+     reshuffle the physical expert weights (weight "shuffling" is a
+     gather over the logical master copy, as vLLM's EPLB does).
+
+Batch-size bucketing mirrors the paper's CUDA-graph integration (§V):
+decode steps are jitted per power-of-two batch bucket and smaller
+batches pad to the bucket, so step functions compile once per bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import build_placement
+from repro.models import lm as LM
+from repro.serving.slo import SLOTracker
+from repro.sharding.policy import Dist
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [n] int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    pos: int = 0                # next position to fill
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8          # decode slots
+    max_len: int = 256          # KV capacity per slot
+    replication_ratio: float = 1.25
+    decode_algo: str = "metro"  # the paper's technique
+    prefill_algo: str = "eplb"
+    rebalance_every: int = 64   # decode steps between EPLB rebalances
+    load_ewma: float = 0.9
+    prefill_chunk: int = 64     # chunked prefill (sarathi-style)
+    greedy: bool = True
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, dist: Dist, params,
+                 ecfg: EngineConfig, routing_table_width: int = 0):
+        self.cfg = cfg
+        self.dist = dist
+        self.ecfg = ecfg
+        self.params = params
+        self.slo = SLOTracker()
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}
+        self.completed: dict[int, Request] = {}
+        self.free_slots = list(range(ecfg.max_batch))
+        self.decode_steps = 0
+        self.expert_loads = np.ones(max(cfg.num_experts, 1))
+        self._table_width = routing_table_width
+
+        if cfg.is_moe:
+            self.placement = build_placement(
+                cfg.num_experts, dist.ep_size, dist.slots_per_device,
+                loads=self.expert_loads)
+            if not self._table_width:
+                self._table_width = min(
+                    dist.num_slots - cfg.num_experts + 1, dist.ep_size * 2)
+                self._table_width = max(self._table_width,
+                                        self.placement.max_replicas)
+            self.routing = LM.build_lm_routing(cfg, self.placement,
+                                               self._table_width)
+            # logical master weights (for rebalance reshuffling)
+            self._logical = self._extract_logical(params)
+        else:
+            self.placement, self.routing = None, {}
+
+        self.cache = LM.init_cache(cfg, dist, ecfg.max_batch, ecfg.max_len)
+        self._decode_fns = {}
+        self._prefill_fns = {}
+
+    # ------------------------------------------------------------------
+    # weight reshuffling (EPLB rebalance)
+    # ------------------------------------------------------------------
+    def _extract_logical(self, params):
+        """Logical expert master: replica 0 of each expert."""
+        first_slot = np.array([
+            self.placement.expert_slots[e, 0]
+            for e in range(self.cfg.num_experts)])
+        out = {}
+
+        def grab(tree, path=()):
+            for k, v in tree.items():
+                if isinstance(v, dict):
+                    grab(v, path + (k,))
+                elif k in ("w_up", "w_down") and v.ndim >= 4:
+                    out[path + (k,)] = np.asarray(v)[:, first_slot]
+        grab(params["blocks"])
+        return out
+
+    def rebalance(self):
+        """Recompute EPLB placement from observed loads + reshuffle."""
+        if not self.cfg.is_moe:
+            return
+        self.placement = build_placement(
+            self.cfg.num_experts, self.dist.ep_size,
+            self.dist.slots_per_device, loads=self.expert_loads)
+        self.routing = LM.build_lm_routing(self.cfg, self.placement,
+                                           self._table_width)
+        idx = self.placement.replica_expert
+
+        def put(tree, path=()):
+            for k, v in list(tree.items()):
+                if isinstance(v, dict):
+                    put(v, path + (k,))
+                elif k in ("w_up", "w_down") and v.ndim >= 4:
+                    tree[k] = jnp.asarray(self._logical[path + (k,)][:, idx])
+        put(self.params["blocks"])
+
+    # ------------------------------------------------------------------
+    # step functions (bucketed)
+    # ------------------------------------------------------------------
+    def _decode_fn(self, bucket: int):
+        if bucket not in self._decode_fns:
+            cfg, dist = self.cfg, self.dist
+
+            @jax.jit
+            def step(params, tokens, pos, cache, routing):
+                logits, new_cache, stats = LM.apply_lm(
+                    cfg, dist, params, tokens=tokens, pos=pos, cache=cache,
+                    routing=routing, mode="decode",
+                    algo=self.ecfg.decode_algo)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return nxt, new_cache, stats
+            self._decode_fns[bucket] = step
+        return self._decode_fns[bucket]
+
+    def _prefill_fn(self, length: int):
+        if length not in self._prefill_fns:
+            cfg, dist = self.cfg, self.dist
+
+            @jax.jit
+            def step(params, tokens, cache, routing):
+                logits, new_cache, stats = LM.apply_lm(
+                    cfg, dist, params, tokens=tokens, cache=cache,
+                    routing=routing, mode="prefill",
+                    algo=self.ecfg.prefill_algo, chunk=64)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return nxt, new_cache, stats
+            self._prefill_fns[length] = step
+        return self._prefill_fns[length]
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        rid = len(self.slo.timings)
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens))
+        self.slo.arrive(rid, len(prompt))
+        return rid
+
+    def _admit(self):
+        admitted = []
+        while self.queue and self.free_slots:
+            r = self.queue.popleft()
+            r.slot = self.free_slots.pop()
+            self.active[r.rid] = r
+            admitted.append(r)
+        return admitted
+
+    def _bucket(self) -> int:
+        return self.ecfg.max_batch  # fixed-slot engine: pad to max_batch
+
+    def _prefill(self, req: Request):
+        """Single-request prefill into its cache slot (padded length)."""
+        n = len(req.prompt)
+        pl = 1 << (n - 1).bit_length()  # pad to pow2 for compile reuse
+        pl = max(pl, 8)
+        toks = np.zeros((1, pl), np.int32)
+        toks[0, :n] = req.prompt
+        cache1 = jax.tree.map(lambda a: a[:, req.slot:req.slot + 1]
+                              if a.ndim >= 2 else a, self.cache)
+        t0 = time.perf_counter()
+        nxt, new_c1, stats = self._prefill_fn(pl)(
+            self.params, jnp.asarray(toks), cache1, self.routing)
+        nxt.block_until_ready()
+        self.slo.step("prefill", time.perf_counter() - t0)
+        # note: prefill computed over padded length; positions >= n hold
+        # garbage but are masked at decode by pos-based validity
+        self.cache = jax.tree.map(
+            lambda full, one: full.at[:, req.slot:req.slot + 1].set(one)
+            if full.ndim >= 2 else one, self.cache, new_c1)
+        req.pos = n
+        # first generated token comes from the last *real* position: use
+        # greedy over the prefill logits of position n-1 — the padded
+        # tail means we take the model's next step in decode instead.
+        self._update_loads(stats)
+
+    def _update_loads(self, stats):
+        if not self.cfg.is_moe:
+            return
+        h = np.asarray(stats["expert_hist"])
+        if h.shape[0] == self.cfg.num_experts:
+            a = self.ecfg.load_ewma
+            self.expert_loads = a * self.expert_loads + (1 - a) * (h + 1e-3)
+
+    def _decode_all(self):
+        if not self.active:
+            return
+        b = self.ecfg.max_batch
+        tokens = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        for r in self.active.values():
+            last = (r.generated[-1] if r.generated
+                    else int(r.prompt[-1]))
+            tokens[r.slot, 0] = last
+            pos[r.slot] = r.pos
+        t0 = time.perf_counter()
+        nxt, self.cache, stats = self._decode_fn(b)(
+            self.params, jnp.asarray(tokens), jnp.asarray(pos),
+            self.cache, self.routing)
+        nxt = np.asarray(nxt)
+        self.slo.step("decode", time.perf_counter() - t0)
+        self.decode_steps += 1
+        self._update_loads(stats)
+        for rid in list(self.active):
+            r = self.active[rid]
+            tok = int(nxt[r.slot])
+            if not r.generated:
+                self.slo.first_token(rid)
+            else:
+                self.slo.token(rid)
+            r.generated.append(tok)
+            r.pos += 1
+            if (len(r.generated) >= r.max_new_tokens
+                    or r.pos >= self.ecfg.max_len - 1):
+                r.done = True
+                self.slo.finish(rid)
+                self.free_slots.append(r.slot)
+                self.completed[rid] = r
+                del self.active[rid]
+        if (self.cfg.is_moe and self.ecfg.rebalance_every
+                and self.decode_steps % self.ecfg.rebalance_every == 0):
+            self.rebalance()
+
+    # ------------------------------------------------------------------
+    def run(self, max_iters: int = 10_000):
+        """Run until queue + active drain (or max_iters)."""
+        it = 0
+        while (self.queue or self.active) and it < max_iters:
+            for req in self._admit():
+                self._prefill(req)
+            self._decode_all()
+            it += 1
+        return self.slo.summary()
+
+    def finished_requests(self):
+        return {rid: t for rid, t in self.slo.timings.items()
+                if t.finished > 0}

@@ -1,0 +1,82 @@
+"""Latency/SLO bookkeeping: TTFT, TPOT, throughput, percentiles."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestTiming:
+    arrival: float
+    first_token: float = 0.0
+    finished: float = 0.0
+    n_prompt: int = 0
+    n_generated: int = 0
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        if self.n_generated <= 1:
+            return 0.0
+        return (self.finished - self.first_token) / (self.n_generated - 1)
+
+
+class SLOTracker:
+    def __init__(self):
+        self.timings: dict[int, RequestTiming] = {}
+        self.step_latencies: list[tuple[str, float]] = []
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def arrive(self, rid: int, n_prompt: int):
+        self.timings[rid] = RequestTiming(arrival=self.now(),
+                                          n_prompt=n_prompt)
+
+    def first_token(self, rid: int):
+        t = self.timings[rid]
+        if t.first_token == 0.0:
+            t.first_token = self.now()
+        t.n_generated += 1
+
+    def token(self, rid: int):
+        self.timings[rid].n_generated += 1
+
+    def finish(self, rid: int):
+        self.timings[rid].finished = self.now()
+
+    def step(self, kind: str, seconds: float):
+        self.step_latencies.append((kind, seconds))
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        done = [t for t in self.timings.values() if t.finished > 0]
+        if not done:
+            return {"requests": 0}
+        ttfts = np.array([t.ttft for t in done])
+        tpots = np.array([t.tpot for t in done if t.n_generated > 1])
+        total_tokens = sum(t.n_prompt + t.n_generated for t in done)
+        wall = max(t.finished for t in done) - min(t.arrival for t in done)
+        by_kind = defaultdict(list)
+        for k, s in self.step_latencies:
+            by_kind[k].append(s)
+        return {
+            "requests": len(done),
+            "ttft_mean": float(ttfts.mean()),
+            "ttft_p99": float(np.percentile(ttfts, 99)),
+            "tpot_mean": float(tpots.mean()) if len(tpots) else 0.0,
+            "tpot_p99": (float(np.percentile(tpots, 99))
+                         if len(tpots) else 0.0),
+            "total_token_throughput": total_tokens / max(wall, 1e-9),
+            "decode_steps": len(by_kind.get("decode", [])),
+            "prefill_steps": len(by_kind.get("prefill", [])),
+            "decode_step_mean_s": (float(np.mean(by_kind["decode"]))
+                                   if by_kind.get("decode") else 0.0),
+        }

@@ -1,0 +1,2 @@
+from repro.sharding.policy import Dist, LOCAL, make_dist
+__all__ = ["Dist", "LOCAL", "make_dist"]

@@ -1,0 +1,207 @@
+"""Distribution context + sharding policy.
+
+One object (:class:`Dist`) threads through the model code and answers:
+  * is a mesh active, and what are the axis names?
+  * how big is the EP group / how many replica slots per device?
+  * what PartitionSpec should tensor X get (with divisibility fallback)?
+
+Model code never imports jax.sharding directly — it calls
+``dist.shard(x, ...)`` which is the identity when no mesh is active, so
+the same model runs on 1 CPU device (smoke tests) and on the 512-chip
+production mesh (dry-run) unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    mesh: Optional[Mesh]
+    dp_axes: tuple[str, ...]      # batch-sharding axes, e.g. ("pod","data")
+    tp_axis: Optional[str]        # tensor/expert-parallel axis ("model")
+    ep_size: int                  # EP group size (mesh tp size, or virtual)
+    slots_per_device: int         # replica slots per EP rank
+    # sequence-parallel MoE dispatch (paper's all-gather scheme) on/off
+    ep_mode: str = "paper"        # "paper" (explicit SP all-gather) | "fused"
+
+    # ------------------------------------------------------------------
+    @property
+    def num_slots(self) -> int:
+        return self.ep_size * self.slots_per_device
+
+    @property
+    def dp_size(self) -> int:
+        if not self.mesh:
+            return 1
+        return int(
+            __import__("numpy").prod([self.mesh.shape[a] for a in self.dp_axes]))
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape[name] if self.mesh else 1
+
+    # ------------------------------------------------------------------
+    def _ok(self, dim: int, axes) -> bool:
+        if not self.mesh or axes is None:
+            return False
+        if isinstance(axes, str):
+            axes = (axes,)
+        import numpy as np
+        size = int(np.prod([self.mesh.shape[a] for a in axes]))
+        return dim % size == 0
+
+    def spec(self, x, *axes) -> P:
+        """PartitionSpec for x with per-dim divisibility fallback: any dim
+        not divisible by its axis group falls back to replication."""
+        out = []
+        for dim, ax in zip(x.shape, axes):
+            out.append(ax if self._ok(dim, ax) else None)
+        return P(*out)
+
+    def shard(self, x, *axes):
+        """with_sharding_constraint under a mesh; identity otherwise."""
+        if not self.mesh:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(x, *axes)))
+
+    def named(self, spec: P) -> Optional[NamedSharding]:
+        if not self.mesh:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+
+LOCAL = Dist(mesh=None, dp_axes=(), tp_axis=None, ep_size=1,
+             slots_per_device=1)
+
+
+# ----------------------------------------------------------------------
+# parameter sharding rules (by leaf name)
+# ----------------------------------------------------------------------
+
+# base specs WITHOUT the leading n_blocks stacking dim.
+# `M` = TP/EP axis ("model"); `D` = in-pod data axis (ETP / FSDP).
+_PARAM_RULES: dict[str, tuple] = {
+    "embed": ("M", None), "unembed": (None, "M"),
+    "wq": (None, "M"), "wk": (None, "M"), "wv": (None, "M"),
+    "wo": ("M", None),
+    "w_gate": (None, "M"), "w_down": ("M", None),
+    # MoE: slots over M, expert-hidden over D (intra-expert TP)
+    "shared_up": (None, None, ("D", "M")), "shared_down": (("D", "M"), None),
+    "w_router": (None, None),
+    # mamba
+    "w_in": (None, "M"), "conv_w": (None, "M"), "conv_b": ("M",),
+    "w_x": ("M", None), "w_dt": (None, "M"), "dt_bias": ("M",),
+    "A_log": ("M", None), "D": ("M",), "w_out": ("M", None),
+    # norms & misc: replicated
+    "scale": (), "bias": (), "q_norm": (), "k_norm": (),
+}
+# w_up: MLP [d, f] rule in 2-D; MoE slot-major [R, d, n_up, fe] in 4-D.
+_WUP_2D = (None, "M")
+_WUP_4D = ("M", None, None, "D")
+_WDOWN_3D = ("M", "D", None)
+
+# FSDP (train): additionally shard the replicated large dim over D so
+# master params + AdamW moments are fully sharded (ZeRO-3-style; XLA
+# inserts the per-layer weight all-gathers).
+_FSDP_RULES: dict[str, tuple] = {
+    "embed": ("M", "D"), "unembed": ("D", "M"),
+    "wq": ("D", "M"), "wk": ("D", "M"), "wv": ("D", "M"),
+    "wo": ("M", "D"),
+    "w_gate": ("D", "M"), "w_down": ("M", "D"),
+    "w_in": ("D", "M"), "w_x": ("M", "D"), "w_dt": ("D", "M"),
+    "A_log": ("M", None), "w_out": ("M", "D"),
+}
+_WUP_2D_FSDP = ("D", "M")
+
+
+def param_pspecs(params, dist: Dist, *, fsdp: bool = False,
+                 kv_replicated: bool = False):
+    """PartitionSpec pytree for a parameter (or optimizer-state) pytree.
+
+    Rules are by leaf name with per-dim divisibility fallback; leaves
+    under a blocks stack get a leading replicated dim.
+
+    kv_replicated: when KV heads don't divide the TP axis, sharding the
+    flattened wk/wv columns forces per-layer activation all-gathers of
+    K/V; replicating wk/wv over the TP axis instead recomputes the tiny
+    KV projections redundantly and removes those collectives entirely
+    (perf iteration, EXPERIMENTS.md §Perf).
+    """
+    import numpy as np
+    ax = dist.tp_axis
+    mesh = dist.mesh
+    d_ax = "data" if (mesh is not None and "data" in mesh.axis_names) \
+        else None
+
+    def sub(a):
+        if a == "M":
+            return ax
+        if a == "D":
+            return d_ax
+        if isinstance(a, tuple):
+            resolved = tuple(x for x in (sub(i) for i in a) if x)
+            return resolved or None
+        return a
+
+    def ok(dim, a):
+        if mesh is None or a is None:
+            return False
+        axes = a if isinstance(a, tuple) else (a,)
+        return dim % int(np.prod([mesh.shape[x] for x in axes])) == 0
+
+    def one(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        name = names[-1]
+        stacked = any(n in ("blocks", "enc_blocks", "dec_blocks")
+                      for n in names)
+        shape = leaf.shape
+        rank = len(shape)
+        eff_rank = rank - int(stacked)
+        if name == "w_up":
+            base = _WUP_4D if eff_rank == 4 else \
+                (_WUP_2D_FSDP if fsdp else _WUP_2D)
+        elif name == "w_down" and eff_rank == 3:
+            base = _WDOWN_3D
+        elif kv_replicated and name in ("wk", "wv"):
+            base = ("D", None) if fsdp else (None, None)
+        elif fsdp and name in _FSDP_RULES:
+            base = _FSDP_RULES[name]
+        else:
+            base = _PARAM_RULES.get(name, tuple([None] * eff_rank))
+        base = tuple(sub(a) for a in base)
+        if stacked:
+            base = (None,) + base
+        base = base + (None,) * (rank - len(base))
+        spec = tuple(a if ok(d, a) else None
+                     for d, a in zip(shape, base))
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def named_pspecs(tree_of_pspecs, dist: Dist):
+    if dist.mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(dist.mesh, s),
+                        tree_of_pspecs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def make_dist(mesh: Optional[Mesh], *, slots_per_device: int = 1,
+              ep_size: Optional[int] = None, ep_mode: str = "paper") -> Dist:
+    """Build a Dist from a mesh (production) or virtual sizes (tests)."""
+    if mesh is None:
+        return Dist(mesh=None, dp_axes=(), tp_axis=None,
+                    ep_size=ep_size or 1, slots_per_device=slots_per_device,
+                    ep_mode=ep_mode)
+    names = mesh.axis_names
+    tp = "model" if "model" in names else None
+    dp = tuple(n for n in names if n != "model")
+    return Dist(mesh=mesh, dp_axes=dp, tp_axis=tp,
+                ep_size=mesh.shape[tp] if tp else 1,
+                slots_per_device=slots_per_device, ep_mode=ep_mode)

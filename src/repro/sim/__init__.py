@@ -1,0 +1,10 @@
+from repro.sim.roofline import (
+    ParallelismConfig, WorkloadConfig, simulate_decode_step,
+    simulate_prefill_step, simulate_serving, synth_topk_batch,
+    decode_layer_breakdown)
+
+__all__ = [
+    "ParallelismConfig", "WorkloadConfig", "simulate_decode_step",
+    "simulate_prefill_step", "simulate_serving", "synth_topk_batch",
+    "decode_layer_breakdown",
+]

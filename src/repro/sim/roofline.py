@@ -1,0 +1,312 @@
+"""Fine-grained analytical roofline simulator (stand-in for the paper's
+proprietary simulator, §VI-A).
+
+Per MoE layer, per device g of an EP group:
+
+  t_mem(g)  = (activated(g) * expert_weight_bytes / tp
+               + tokens(g) * act_io_bytes) / HBM_bw
+  t_comp(g) = tokens(g) * expert_flops / (tp * peak)
+  t_layer   = max_g max(t_mem, t_comp)  +  t_dispatch + t_combine
+
+i.e. runtime is set by the most-bottlenecked device (the paper's load
+imbalance model), memory-bound whenever weight streaming dominates —
+which makes the layer time proportional to *activated experts*, the
+paper's central observation (§III-B).  Attention, dense FFN, collective
+launch latency and link bandwidth are modeled the same way.
+
+Routing statistics come from *actually running* our routers
+(core.routing) on synthetic top-k traces with Zipf-skewed expert
+popularity — the analogue of the paper's replayed vLLM traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import metrics as M
+from repro.core.metrics import HardwareSpec
+from repro.core.placement import build_placement, slots_for_ratio
+from repro.core.types import Placement
+
+import jax.numpy as jnp
+from repro.core import routing as R
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelismConfig:
+    tp: int = 1     # chips acting as one EP rank (intra-expert TP)
+    ep: int = 8     # EP ranks
+
+    @property
+    def chips(self) -> int:
+        return self.tp * self.ep
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    """Synthetic trace knobs.
+
+    alpha = Zipf skew of expert popularity (decode-heavy coding
+    workloads are more skewed than prefill-heavy math, paper Fig. 8).
+    domains = token clustering: real batches mix a few request domains,
+    each exercising its own expert subset — i.i.d. sampling would
+    unrealistically activate nearly every expert at k=8."""
+    name: str = "humaneval-like"
+    zipf_alpha: float = 1.2
+    prompt_len: int = 1024
+    gen_len: int = 2048
+    domains: int = 4
+    layer_decorrelation: bool = True
+    seed: int = 0
+
+
+class LayerTrace:
+    """Fixed (permutation, domain-offsets) expert-popularity model for
+    one MoE layer: .sample() draws correlated top-k batches; .loads()
+    is the matching historical per-expert load EPLB replication sees."""
+
+    def __init__(self, rng, num_experts: int, alpha: float,
+                 domains: int = 1):
+        self.n = num_experts
+        self.alpha = alpha
+        self.domains = max(domains, 1)
+        self.perm = rng.permutation(self.n)
+        self.offs = rng.integers(0, self.n, self.domains)
+        base = 1.0 / np.power(np.arange(1, self.n + 1), alpha)
+        self._dom_p = [np.roll(base, o) / base.sum() for o in self.offs]
+
+    def sample(self, rng, tokens: int, k: int) -> np.ndarray:
+        ids = np.empty((tokens, k), dtype=np.int64)
+        tok_dom = rng.integers(0, self.domains, tokens)
+        for t in range(tokens):
+            ids[t] = self.perm[rng.choice(
+                self.n, size=k, replace=False, p=self._dom_p[tok_dom[t]])]
+        return ids
+
+    def loads(self) -> np.ndarray:
+        mix = np.mean(self._dom_p, axis=0)
+        loads = np.empty(self.n)
+        loads[self.perm] = mix
+        return loads
+
+
+def synth_topk_batch(rng, num_experts: int, tokens: int, k: int,
+                     alpha: float, perm: Optional[np.ndarray] = None,
+                     domains: int = 1):
+    """[T, k] distinct expert ids per token (compat wrapper)."""
+    tr = LayerTrace(rng, num_experts, alpha, domains)
+    if perm is not None:
+        tr.perm = perm
+    return tr.sample(rng, tokens, k)
+
+
+def _route_stats(cfg: ModelConfig, placement: Placement, ids: np.ndarray,
+                 algo: str):
+    """Run the real router; return (activated[G], tokens[G])."""
+    idsj = jnp.asarray(ids, jnp.int32)
+    hist = R.topk_histogram(idsj, cfg.num_experts)
+    slots = R.route(algo, idsj, hist, jnp.asarray(placement.expert_slots),
+                    jnp.asarray(placement.expert_num_replicas),
+                    num_devices=placement.num_devices,
+                    slots_per_device=placement.slots_per_device)
+    g, s = placement.num_devices, placement.slots_per_device
+    act = np.asarray(M.activated_per_device(slots, g, s))
+    tok = np.asarray(M.tokens_per_device(slots, g, s))
+    return act, tok
+
+
+# ----------------------------------------------------------------------
+# per-layer time model
+# ----------------------------------------------------------------------
+
+
+def decode_layer_breakdown(cfg: ModelConfig, hw: HardwareSpec,
+                           par: ParallelismConfig, batch: int, ctx: int,
+                           act: np.ndarray, tok: np.ndarray,
+                           bytes_per_param: float = 2.0) -> dict:
+    """One decode step through one (attention + MoE-FFN) layer.
+
+    act/tok: per-EP-rank routing stats for this batch."""
+    d, fe = cfg.d_model, cfg.expert_hidden
+    n_mat = 3 if cfg.gated_mlp else 2
+    chips = par.chips
+
+    # ---- attention (DP over requests, KV cache read dominates) -------
+    kv_heads = max(cfg.num_kv_heads, 1)
+    kv_bytes_per_req = 2 * ctx * kv_heads * cfg.head_dim * bytes_per_param
+    attn_w_bytes = (d * cfg.head_dim
+                    * (cfg.num_heads + 2 * kv_heads)
+                    + cfg.num_heads * cfg.head_dim * d) * bytes_per_param
+    b_per_chip = max(batch / chips, 1e-9)
+    t_attn_mem = (b_per_chip * kv_bytes_per_req
+                  + attn_w_bytes / chips) / hw.hbm_bw
+    attn_flops = (b_per_chip
+                  * (2 * ctx * kv_heads * cfg.head_dim * 2
+                     + 4 * d * cfg.num_heads * cfg.head_dim))
+    t_attn = max(t_attn_mem, attn_flops / hw.peak_flops)
+
+    # ---- MoE FFN: the paper's model --------------------------------
+    w_bytes = n_mat * d * fe * bytes_per_param
+    act_io = 2 * d * 2 * bytes_per_param
+    t_mem = (act * w_bytes / par.tp + tok * act_io) / hw.hbm_bw
+    flops = tok * 2.0 * n_mat * d * fe
+    t_comp = flops / (par.tp * hw.peak_flops)
+    t_ffn = float(np.max(np.maximum(t_mem, t_comp)))
+    if cfg.num_shared_experts:
+        sh_bytes = n_mat * d * fe * cfg.num_shared_experts \
+            * bytes_per_param / chips
+        sh_flops = batch * 2 * n_mat * d * fe * cfg.num_shared_experts \
+            / chips
+        t_ffn += max(sh_bytes / hw.hbm_bw, sh_flops / hw.peak_flops)
+
+    # ---- dispatch + combine (all-gather + all-to-all/scatter) -------
+    tok_bytes = batch * d * bytes_per_param
+    t_disp = hw.collective_launch + tok_bytes / hw.link_bw / chips
+    t_comb = hw.collective_launch + tok_bytes / hw.link_bw / chips
+
+    return {"attn": t_attn, "ffn": t_ffn, "dispatch": t_disp,
+            "combine": t_comb,
+            "total": t_attn + t_ffn + t_disp + t_comb}
+
+
+def simulate_decode_step(cfg: ModelConfig, hw: HardwareSpec,
+                         par: ParallelismConfig, batch: int, ctx: int,
+                         algo: str, placement: Placement,
+                         wl: WorkloadConfig, rng,
+                         routing_overhead: float = 26e-6) -> dict:
+    """Time for one full-model decode step of `batch` tokens.
+
+    routing_overhead: per-layer cost of Alg. 1 AT 1.5x replication —
+    26us measured by the paper on A100 (§VI-B, Fig. 11: the cost grows
+    with replication since lock contention and candidate counts scale
+    with replicas); scaled linearly in (ratio - 1)/0.5 below.  Our TPU
+    scalar-core kernel estimate is ~5us (sequential, no locks).
+    At 1.0x replication no routing decision exists (paper §VI-A), so
+    neither the overhead nor any algo difference applies."""
+    if placement.replication_ratio <= 1.001:
+        algo, routing_overhead = "single", 0.0
+    routing_overhead *= min((placement.replication_ratio - 1.0) / 0.5, 1.0)
+    kinds = cfg.layer_kinds()
+    blocks = cfg.num_layers // len(kinds)
+    n, g = cfg.num_experts, placement.num_devices
+    spd = placement.slots_per_device
+    t_total, t_ffn, max_act = 0.0, 0.0, 0
+    for i, (mixer, ffn) in enumerate(kinds):
+        if ffn == "moe":
+            # per-layer expert popularity; EPLB replicates by the SAME
+            # (historical) loads the trace follows — the paper's setup,
+            # where hot experts hold many replicas and the round-robin
+            # router spreads their tokens across all of them.
+            trace = LayerTrace(rng, n, wl.zipf_alpha, wl.domains)
+            placement_l = build_placement(n, g, spd, loads=trace.loads())
+            ids = trace.sample(rng, batch, cfg.num_experts_per_tok)
+            act, tok = _route_stats(cfg, placement_l, ids, algo)
+            max_act = max(max_act, int(act.max()))
+        else:
+            act = tok = np.zeros(par.ep)
+        br = decode_layer_breakdown(cfg, hw, par, batch, ctx, act, tok)
+        if ffn == "dense":   # dense FFN: treat as 1 always-active expert
+            n_mat = 3 if cfg.gated_mlp else 2
+            w = n_mat * cfg.d_model * cfg.d_ff * 2.0 / par.chips
+            f = batch * 2 * n_mat * cfg.d_model * cfg.d_ff / par.chips
+            br["ffn"] = max(w / hw.hbm_bw, f / hw.peak_flops)
+            br["total"] = br["attn"] + br["ffn"] + br["dispatch"] \
+                + br["combine"]
+        if ffn == "moe" and algo == "metro":
+            br["total"] += routing_overhead  # Alg. 1 kernel cost (§VI-B)
+        t_total += br["total"] * blocks
+        t_ffn += br["ffn"] * blocks
+    # lm head + embed
+    head = 2 * cfg.d_model * cfg.vocab_size * 2.0 / par.chips
+    t_total += max(head / hw.hbm_bw,
+                   batch * head / 2 / par.chips / hw.peak_flops)
+    return {"step_s": t_total, "ffn_s": t_ffn, "max_activated": max_act}
+
+
+def simulate_prefill_step(cfg: ModelConfig, hw: HardwareSpec,
+                          par: ParallelismConfig, tokens: int,
+                          algo: str, placement: Placement,
+                          wl: WorkloadConfig, rng) -> dict:
+    """Chunked-prefill step over `tokens` tokens (compute-bound path).
+
+    Token balance (what EPLB optimizes) sets the bottleneck device."""
+    kinds = cfg.layer_kinds()
+    blocks = cfg.num_layers // len(kinds)
+    n_mat = 3 if cfg.gated_mlp else 2
+    d = cfg.d_model
+    t = 0.0
+    for i, (mixer, ffn) in enumerate(kinds):
+        if ffn == "moe":
+            ids = synth_topk_batch(
+                rng, cfg.num_experts, min(tokens, 2048),
+                cfg.num_experts_per_tok, wl.zipf_alpha)
+            act, tok = _route_stats(cfg, placement, ids, algo)
+            scale = tokens / min(tokens, 2048)
+            fe = cfg.expert_hidden
+            flops = tok * scale * 2 * n_mat * d * fe
+            w_bytes = act * n_mat * d * fe * 2.0 / par.tp
+            tmax = float(np.max(np.maximum(
+                flops / (par.tp * hw.peak_flops), w_bytes / hw.hbm_bw)))
+        else:
+            f = tokens * 2 * n_mat * d * cfg.d_ff / par.chips
+            tmax = f / hw.peak_flops
+        # attention: flops-bound at prefill
+        att = tokens * (4 * d * cfg.num_heads * cfg.head_dim
+                        + 2 * 2 * wl.prompt_len * cfg.num_heads
+                        * cfg.head_dim) / par.chips
+        t += (tmax + att / hw.peak_flops
+              + 2 * hw.collective_launch) * blocks
+    return {"step_s": t}
+
+
+def simulate_serving(cfg: ModelConfig, hw: HardwareSpec,
+                     par: ParallelismConfig, wl: WorkloadConfig, *,
+                     algo: str, replication_ratio: float,
+                     decode_batch: int = 1024, prefill_chunk: int = 8192,
+                     n_requests: int = 64, ctx: Optional[int] = None,
+                     seed: int = 0) -> dict:
+    """Co-deployed prefill+decode serving (paper Figs. 9/10).
+
+    Placement/replication is EPLB in all cases (paper: both routers use
+    EPLB placement); `algo` selects the *decode* router; prefill always
+    uses EPLB routing."""
+    rng = np.random.default_rng(seed)
+    spd = slots_for_ratio(cfg.num_experts, par.ep, replication_ratio)
+    loads = 1.0 / np.power(
+        np.arange(1, cfg.num_experts + 1), wl.zipf_alpha)
+    placement = build_placement(cfg.num_experts, par.ep, spd,
+                                loads=rng.permutation(loads))
+    ctx = ctx or (wl.prompt_len + wl.gen_len // 2)
+
+    # prefill: total prompt tokens in chunks (EPLB routing, paper setup)
+    total_prompt = n_requests * wl.prompt_len
+    n_chunks = int(np.ceil(total_prompt / prefill_chunk))
+    t_prefill = sum(
+        simulate_prefill_step(cfg, hw, par, prefill_chunk, "eplb",
+                              placement, wl, rng)["step_s"]
+        for _ in range(min(n_chunks, 4))) / min(n_chunks, 4) * n_chunks
+
+    # decode: gen_len steps at the configured global batch
+    sample_steps = 4
+    dec = [simulate_decode_step(cfg, hw, par, decode_batch, ctx, algo,
+                                placement, wl, rng)
+           for _ in range(sample_steps)]
+    t_step = float(np.mean([d["step_s"] for d in dec]))
+    max_act = int(np.max([d["max_activated"] for d in dec]))
+    n_steps = wl.gen_len
+    t_decode = t_step * n_steps
+
+    total_tokens = n_requests * wl.prompt_len + decode_batch * n_steps
+    wall = t_prefill + t_decode
+    return {
+        "tpot_s": t_step,
+        "ttft_s": t_prefill / max(n_chunks, 1),
+        "decode_tput": decode_batch / t_step,
+        "total_token_throughput": total_tokens / wall,
+        "max_activated": max_act,
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+    }

@@ -1,0 +1,6 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training import checkpoint
+
+# NOTE: train_loop imports launch.steps which imports this package —
+# import repro.training.train_loop directly to avoid the cycle.
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "checkpoint"]

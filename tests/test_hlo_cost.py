@@ -1,0 +1,75 @@
+"""Validate the trip-count-aware HLO cost walker against known programs.
+
+Runs jax in a subprocess-free way on the default 1-device CPU (no forced
+device count needed: these programs are unsharded)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _compile(f, *avals):
+    return jax.jit(f).lower(*avals).compile().as_text()
+
+
+class TestHloCost:
+    def test_plain_matmul(self):
+        a = jax.ShapeDtypeStruct((256, 128), jnp.float32)
+        b = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+        txt = _compile(lambda x, y: x @ y, a, b)
+        c = analyze_hlo(txt, assume_bf16_compute=False)
+        assert c.flops == pytest.approx(2 * 256 * 128 * 64, rel=0.01)
+        want_bytes = 4 * (256 * 128 + 128 * 64 + 256 * 64)
+        assert c.dot_bytes == pytest.approx(want_bytes, rel=0.01)
+        # bf16-compute correction halves float byte counts
+        c2 = analyze_hlo(txt)
+        assert c2.dot_bytes == pytest.approx(want_bytes / 2, rel=0.01)
+
+    def test_scan_multiplies_trip_count(self):
+        def f(x):
+            def body(c, _):
+                return c @ c, None
+            out, _ = jax.lax.scan(body, x, None, length=7)
+            return out
+
+        txt = _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        c = analyze_hlo(txt)
+        assert c.while_loops >= 1
+        assert c.flops == pytest.approx(7 * 2 * 128 ** 3, rel=0.01)
+
+    def test_nested_scan(self):
+        def f(x):
+            def inner(c, _):
+                return c @ c, None
+
+            def outer(c, _):
+                c2, _ = jax.lax.scan(inner, c, None, length=3)
+                return c2, None
+
+            out, _ = jax.lax.scan(outer, x, None, length=5)
+            return out
+
+        txt = _compile(f, jax.ShapeDtypeStruct((64, 64), jnp.float32))
+        c = analyze_hlo(txt)
+        assert c.flops == pytest.approx(15 * 2 * 64 ** 3, rel=0.01)
+
+    def test_batched_dot(self):
+        a = jax.ShapeDtypeStruct((8, 32, 16), jnp.bfloat16)
+        b = jax.ShapeDtypeStruct((8, 16, 24), jnp.bfloat16)
+        txt = _compile(
+            lambda x, y: jnp.einsum("bij,bjk->bik", x, y), a, b)
+        c = analyze_hlo(txt)
+        assert c.flops == pytest.approx(2 * 8 * 32 * 16 * 24, rel=0.01)
+
+    def test_grad_counts_both_passes(self):
+        a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+        def loss(w):
+            return jnp.sum((w @ w) ** 2)
+
+        txt = _compile(jax.grad(loss), a)
+        c = analyze_hlo(txt)
+        # fwd 1 dot + bwd >= 2 dots
+        assert c.flops >= 3 * 2 * 64 ** 3 * 0.9

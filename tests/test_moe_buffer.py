@@ -1,0 +1,88 @@
+"""Property tests for the MoE dispatch buffer (the static-shape heart
+of the EP datapath) and the grouped-matmul implementations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.moe import build_pair_buffer, grouped_matmul
+
+_case = st.tuples(
+    st.integers(1, 40),      # tokens
+    st.integers(1, 4),       # k
+    st.integers(1, 6),       # local slots
+    st.integers(0, 12),      # total slots (lo offset room)
+    st.integers(0, 2**31 - 1),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_case)
+def test_pair_buffer_invariants(case):
+    t, k, s_loc, extra, seed = case
+    rng = np.random.default_rng(seed)
+    total_slots = s_loc + extra
+    lo = extra // 2
+    slots = rng.integers(-1, total_slots, (t, k)).astype(np.int32)
+    tile = int(rng.choice([1, 2, 4, 8]))
+    n_local = int(((slots >= lo) & (slots < lo + s_loc)).sum())
+    capacity = ((n_local + s_loc * (tile - 1)) // tile + 1) * tile
+
+    buf_pair, group_pad, tile_group = jax.jit(
+        build_pair_buffer, static_argnames=("s_loc", "capacity", "tile")
+    )(jnp.asarray(slots), lo, s_loc=s_loc, capacity=capacity, tile=tile)
+    buf_pair = np.asarray(buf_pair)
+    group_pad = np.asarray(group_pad)
+    tile_group = np.asarray(tile_group)
+
+    # 1. every local pair appears exactly once; non-local never
+    placed = buf_pair[buf_pair >= 0]
+    assert len(placed) == len(set(placed.tolist())) == n_local
+    flat = slots.reshape(-1)
+    for pidx in placed:
+        assert lo <= flat[pidx] < lo + s_loc
+
+    # 2. rows sit inside their slot's padded segment, in segment order
+    bounds = np.concatenate([[0], np.cumsum(group_pad)])
+    for row, pidx in enumerate(buf_pair):
+        if pidx < 0:
+            continue
+        g = flat[pidx] - lo
+        assert bounds[g] <= row < bounds[g + 1]
+
+    # 3. tile alignment: group_pad multiples of tile; tile_group
+    #    constant within each tile's segment
+    assert (group_pad % tile == 0).all()
+    for ti, g in enumerate(tile_group):
+        start = ti * tile
+        if start < bounds[-1]:
+            # the tile lies fully inside group g's padded segment
+            assert bounds[g] <= start and start + tile <= bounds[g + 1]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_grouped_matmul_impls_agree(seed):
+    rng = np.random.default_rng(seed)
+    s_loc = int(rng.integers(1, 5))
+    tile = int(rng.choice([2, 4, 8]))
+    gs = rng.integers(0, 4, s_loc) * tile          # tile-aligned sizes
+    c = int(gs.sum() + tile * rng.integers(1, 3))  # slack
+    d, f = 16, 24
+    x = jnp.asarray(rng.normal(size=(c, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(s_loc, d, f)) * 0.1, jnp.float32)
+    group_pad = jnp.asarray(gs, jnp.int32)
+    bounds = np.cumsum(gs)
+    tg = np.minimum(
+        np.searchsorted(bounds, np.arange(c // tile) * tile, side="right"),
+        s_loc - 1).astype(np.int32)
+    tgj = jnp.asarray(tg)
+
+    outs = {impl: np.asarray(
+        grouped_matmul(x, w, group_pad, tgj, impl))
+        for impl in ("ragged", "scan_tiles", "onehot")}
+    n = int(gs.sum())  # only real rows are defined
+    np.testing.assert_allclose(outs["ragged"][:n], outs["onehot"][:n],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(outs["scan_tiles"][:n], outs["onehot"][:n],
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,167 @@
+"""Unit tests for METRO / EPLB routing and EPLB placement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_placement, slots_for_ratio, route_metro, route_eplb,
+    route_single, metro_token_slots, topk_histogram, rank_within_expert,
+    routing_stats, solve_min_exp_routing,
+)
+
+
+def _toy_placement():
+    # 4 experts, 4 devices, 2 slots/device -> 8 slots (2x replication)
+    return build_placement(4, 4, 2, loads=np.array([4.0, 3.0, 2.0, 1.0]))
+
+
+class TestPlacement:
+    def test_all_experts_hosted(self):
+        p = _toy_placement()
+        assert set(p.replica_expert.tolist()) == {0, 1, 2, 3}
+
+    def test_replica_counts_follow_load(self):
+        p = _toy_placement()
+        # heavier experts get at least as many replicas
+        c = p.expert_num_replicas
+        assert c[0] >= c[3]
+        assert c.sum() == 8
+
+    def test_slots_for_ratio_divisibility(self):
+        # qwen2-moe case from the paper's assigned archs: 60 experts, 16 EP
+        s = slots_for_ratio(60, 16, 1.0)
+        assert s * 16 >= 60
+        p = build_placement(60, 16, s)
+        assert p.num_slots == 64
+
+    def test_no_colocated_replicas_when_avoidable(self):
+        p = build_placement(8, 8, 2, loads=np.ones(8))
+        for d in range(8):
+            slots = p.replica_expert[d * 2:(d + 1) * 2]
+            assert slots[0] != slots[1]
+
+
+class TestHistogramAndRank:
+    def test_histogram(self):
+        e = jnp.array([[0, 1], [1, 2], [-1, 1]])
+        t = topk_histogram(e, 4)
+        assert t.tolist() == [1, 3, 1, 0]
+
+    def test_rank_within_expert(self):
+        e = jnp.array([2, 0, 2, 2, 0, -1])
+        r = rank_within_expert(e)
+        # expert 2 appears at flat pos 0,2,3 -> ranks 0,1,2; expert 0 at 1,4
+        assert r[0] == 0 and r[2] == 1 and r[3] == 2
+        assert r[1] == 0 and r[4] == 1
+
+
+class TestMetro:
+    def test_lemma1_single_replica_per_expert(self):
+        """Lemma 1: METRO routes all tokens of an expert to ONE replica."""
+        p = _toy_placement()
+        ids = jnp.array(np.random.default_rng(0).integers(0, 4, (32, 2)))
+        t = topk_histogram(ids, 4)
+        es = route_metro(t, jnp.asarray(p.expert_slots),
+                         num_devices=4, slots_per_device=2)
+        slots = metro_token_slots(ids, es)
+        for e in range(4):
+            used = np.unique(np.asarray(slots)[np.asarray(ids) == e])
+            assert len(used) <= 1
+
+    def test_respects_placement(self):
+        p = _toy_placement()
+        ids = jnp.array(np.random.default_rng(1).integers(0, 4, (16, 2)))
+        t = topk_histogram(ids, 4)
+        es = np.asarray(route_metro(t, jnp.asarray(p.expert_slots),
+                                    num_devices=4, slots_per_device=2))
+        for e in range(4):
+            if es[e] >= 0:
+                assert p.replica_expert[es[e]] == e
+
+    def test_inactive_experts_not_activated(self):
+        p = _toy_placement()
+        t = jnp.array([5, 0, 3, 0])
+        es = np.asarray(route_metro(t, jnp.asarray(p.expert_slots),
+                                    num_devices=4, slots_per_device=2))
+        assert es[1] == -1 and es[3] == -1
+        assert es[0] >= 0 and es[2] >= 0
+
+    def test_matches_optimal_on_toy(self):
+        """Fig. 4's toy regime: METRO should reach the ideal lambda."""
+        # 4 experts each on 2 of 4 devices, all active -> optimal lambda = 1
+        p = build_placement(4, 4, 2, loads=np.ones(4))
+        t = jnp.array([4, 4, 4, 4])
+        es = route_metro(t, jnp.asarray(p.expert_slots),
+                         num_devices=4, slots_per_device=2)
+        ids = jnp.repeat(jnp.arange(4), 4).reshape(-1, 1)
+        slots = metro_token_slots(ids, es)
+        stats = routing_stats(slots, p)
+        lam_opt, _ = solve_min_exp_routing(np.asarray(t), p.placement_matrix())
+        assert stats.max_activated == lam_opt == 1
+
+    def test_metro_beats_eplb_on_paper_example(self):
+        """Paper Fig. 4: token balancing doubles activated experts."""
+        # 8 experts, 8 devices, 2 slots each (2x replication), 16 tokens,
+        # 2 tokens per expert (the figure's setup).
+        p = build_placement(8, 8, 2, loads=np.ones(8))
+        ids = jnp.repeat(jnp.arange(8), 2).reshape(-1, 1)
+        t = topk_histogram(ids, 8)
+        es = route_metro(t, jnp.asarray(p.expert_slots),
+                         num_devices=8, slots_per_device=2)
+        m_slots = metro_token_slots(ids, es)
+        e_slots = route_eplb(ids, jnp.asarray(p.expert_slots),
+                             jnp.asarray(p.expert_num_replicas))
+        m = routing_stats(m_slots, p)
+        e = routing_stats(e_slots, p)
+        assert m.max_activated == 1
+        assert e.max_activated == 2  # EPLB splits across both replicas
+        assert m.max_activated < e.max_activated
+
+
+class TestEplb:
+    def test_round_robin_even_split(self):
+        p = _toy_placement()
+        e0_reps = int(p.expert_num_replicas[0])
+        ids = jnp.zeros((8, 1), jnp.int32)  # 8 tokens all to expert 0
+        slots = np.asarray(route_eplb(ids, jnp.asarray(p.expert_slots),
+                                      jnp.asarray(p.expert_num_replicas)))
+        counts = {s: int((slots == s).sum()) for s in np.unique(slots)}
+        assert len(counts) == e0_reps
+        assert max(counts.values()) - min(counts.values()) <= 1
+
+    def test_invalid_pairs_pass_through(self):
+        p = _toy_placement()
+        ids = jnp.array([[0, -1]])
+        slots = np.asarray(route_eplb(ids, jnp.asarray(p.expert_slots),
+                                      jnp.asarray(p.expert_num_replicas)))
+        assert slots[0, 1] == -1
+        assert slots[0, 0] >= 0
+
+    def test_single_route(self):
+        p = _toy_placement()
+        ids = jnp.array([[2, -1]])
+        s = np.asarray(route_single(ids, jnp.asarray(p.expert_slots)))
+        assert s[0, 0] == p.expert_slots[2, 0]
+        assert s[0, 1] == -1
+
+
+class TestOptimal:
+    def test_feasibility_bounds(self):
+        rng = np.random.default_rng(2)
+        p = build_placement(16, 4, 5, loads=rng.random(16))
+        t = rng.integers(0, 10, 16)
+        lam, assign = solve_min_exp_routing(t, p.placement_matrix())
+        active = (t > 0)
+        # every active expert assigned, respecting placement
+        A = p.placement_matrix()
+        for e in np.nonzero(active)[0]:
+            assert assign[e] >= 0 and A[e, assign[e]] == 1
+        per_dev = np.bincount(assign[assign >= 0], minlength=4)
+        assert per_dev.max() == lam
+        assert lam >= int(np.ceil(active.sum() / 4))
+
+    def test_zero_tokens(self):
+        p = _toy_placement()
+        lam, assign = solve_min_exp_routing(np.zeros(4), p.placement_matrix())
+        assert lam == 0 and (assign == -1).all()

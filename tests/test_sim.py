@@ -1,0 +1,69 @@
+"""Roofline-simulator sanity: the paper's qualitative structure must
+hold in the model (these are the relationships Figs. 5/9/10 rest on)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import build_placement, slots_for_ratio
+from repro.core.metrics import A100_40G, moe_layer_runtime, TPU_V5E
+from repro.sim import (ParallelismConfig, WorkloadConfig,
+                       simulate_decode_step, simulate_serving)
+from repro.sim.roofline import LayerTrace
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-30b-a3b")
+    par = ParallelismConfig(tp=1, ep=8)
+    wl = WorkloadConfig(zipf_alpha=1.2, domains=4)
+    return cfg, par, wl
+
+
+class TestSimulator:
+    def test_metro_never_slower_at_any_ratio(self, setup):
+        cfg, par, wl = setup
+        for ratio in (1.0, 1.25, 1.5):
+            r = {a: simulate_serving(cfg, A100_40G, par, wl, algo=a,
+                                     replication_ratio=ratio,
+                                     decode_batch=256, n_requests=16,
+                                     seed=3)
+                 for a in ("eplb", "metro")}
+            # allow a small routing-overhead epsilon at low ratios
+            assert r["metro"]["tpot_s"] <= r["eplb"]["tpot_s"] * 1.02
+
+    def test_eplb_tpot_grows_with_replication(self, setup):
+        cfg, par, wl = setup
+        tp = [simulate_serving(cfg, A100_40G, par, wl, algo="eplb",
+                               replication_ratio=rr, decode_batch=256,
+                               n_requests=16, seed=3)["tpot_s"]
+              for rr in (1.0, 1.25, 1.5)]
+        assert tp[0] < tp[1] < tp[2], "paper Fig. 5b structure"
+
+    def test_metro_reduces_activated_at_1_5(self, setup):
+        cfg, par, wl = setup
+        r = {a: simulate_serving(cfg, A100_40G, par, wl, algo=a,
+                                 replication_ratio=1.5,
+                                 decode_batch=256, n_requests=16,
+                                 seed=3)
+             for a in ("eplb", "metro")}
+        assert r["metro"]["max_activated"] < r["eplb"]["max_activated"]
+
+    def test_memory_bound_layer_model(self):
+        """More activated experts -> more time, at equal token counts."""
+        tok = np.full(8, 64.0)
+        t1 = moe_layer_runtime(np.full(8, 8), tok, d_model=2048,
+                               d_ff=768, bytes_per_param=2, hw=TPU_V5E)
+        t2 = moe_layer_runtime(np.full(8, 16), tok, d_model=2048,
+                               d_ff=768, bytes_per_param=2, hw=TPU_V5E)
+        assert t2 > t1 * 1.5
+
+    def test_trace_loads_match_sampling(self):
+        rng = np.random.default_rng(0)
+        tr = LayerTrace(rng, 64, 1.2, domains=4)
+        ids = tr.sample(rng, 4000, 4)
+        emp = np.bincount(ids.reshape(-1), minlength=64) / (4000 * 4)
+        model = tr.loads() / tr.loads().sum()
+        # top-decile hot sets should agree
+        hot_emp = set(np.argsort(emp)[-6:])
+        hot_mod = set(np.argsort(model)[-6:])
+        assert len(hot_emp & hot_mod) >= 4
