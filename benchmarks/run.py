@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig9_10_e2e           simulated TPOT + total throughput
   fig11_breakdown       per-layer latency breakdown
   fig12_pareto          decode Pareto frontier over TPxEPxbatch
+  engine_scale          bucketing/paging compile discipline + Poisson load
 """
 import argparse
 import sys
@@ -22,10 +23,11 @@ def main() -> None:
                     help="reduced trial counts")
     args = ap.parse_args()
 
-    from benchmarks import (fig5_engine, fig6_routing_overhead,
-                            fig8_activated_experts, fig9_10_e2e,
-                            fig11_breakdown, fig12_pareto)
+    from benchmarks import (bench_engine_scale, fig5_engine,
+                            fig6_routing_overhead, fig8_activated_experts,
+                            fig9_10_e2e, fig11_breakdown, fig12_pareto)
     suites = {
+        "engine_scale": lambda: bench_engine_scale.run(fast=args.fast),
         "fig6": lambda: fig6_routing_overhead.run(),
         "fig8": lambda: fig8_activated_experts.run(
             trials=3 if args.fast else 8),

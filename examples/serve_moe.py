@@ -1,22 +1,23 @@
-"""End-to-end driver: serve a small MoE model with batched requests.
+"""End-to-end driver: serve a small MoE model under synthetic load.
 
-Runs the full serving engine — continuous batching, chunked prefill +
-decode co-deployment, METRO decode routing, periodic EPLB rebalancing
-with physical weight reshuffling — on a reduced Qwen3-30B-A3B-family
-config on CPU, then compares METRO vs EPLB routing on the identical
-request stream.
+Runs the full serving engine — continuous batching, batched wave
+prefill + decode co-deployment, power-of-two decode bucketing, paged KV
+cache, METRO decode routing, periodic EPLB rebalancing with physical
+weight reshuffling — on a reduced Qwen3-30B-A3B-family config on CPU,
+then compares METRO vs EPLB routing on the identical Poisson request
+trace.
 
     PYTHONPATH=src python examples/serve_moe.py
 """
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import build_placement, slots_for_ratio
 from repro.models import init_lm
-from repro.serving import EngineConfig, ServingEngine
+from repro.serving import (EngineConfig, ServingEngine, TrafficConfig,
+                           generate_trace, replay_open_loop)
 from repro.sharding.policy import make_dist
 
 
@@ -29,28 +30,32 @@ def build_engine(decode_algo: str):
     params = init_lm(cfg, jax.random.PRNGKey(0), dist,
                      replica_expert=placement.replica_expert)
     ecfg = EngineConfig(max_batch=8, max_len=96, decode_algo=decode_algo,
-                        rebalance_every=32)
+                        rebalance_every=32, page_size=16)
     return cfg, ServingEngine(cfg, dist, params, ecfg)
 
 
 def main():
-    rng = np.random.default_rng(42)
-    prompts = [rng.integers(0, 256, int(rng.integers(4, 24)))
-               for _ in range(12)]
-
+    trace = None
     for algo in ("eplb", "metro"):
         cfg, eng = build_engine(algo)
-        for p in prompts:
-            eng.submit(p, max_new_tokens=16)
+        if trace is None:
+            trace = generate_trace(TrafficConfig(
+                num_requests=12, arrival_rate=300.0, seed=42,
+                prompt_len_mean=10, prompt_len_max=24,
+                output_len_mean=16, output_len_sigma=0.2,
+                output_len_max=16, vocab_size=cfg.vocab_size))
         t0 = time.perf_counter()
-        s = eng.run()
+        s = replay_open_loop(eng, trace, step_time=5e-3)
         wall = time.perf_counter() - t0
         print(f"[{algo:5s}] {s['requests']} requests in {wall:.1f}s | "
-              f"TTFT {s['ttft_mean']*1e3:.0f}ms  "
-              f"TPOT {s['tpot_mean']*1e3:.1f}ms  "
-              f"throughput {s['total_token_throughput']:.1f} tok/s  "
-              f"({s['decode_steps']} decode / {s['prefill_steps']} "
-              f"prefill steps)")
+              f"TTFT p50 {s['ttft_p50']*1e3:.0f}ms p99 "
+              f"{s['ttft_p99']*1e3:.0f}ms | "
+              f"TPOT p50 {s['tpot_p50']*1e3:.1f}ms p99 "
+              f"{s['tpot_p99']*1e3:.1f}ms | "
+              f"throughput {s['total_token_throughput']:.1f} tok/s | "
+              f"{s['decode_steps']} decode / {s['prefill_steps']} "
+              f"prefill steps | {s['total_compiles']} compiles "
+              f"({s['decode_compiles']} decode)")
     print("\n(identical generated tokens across algos — routing only "
           "moves compute; on TPU the decode-phase gain comes from fewer "
           "activated experts per chip)")

@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 _NEG = -1e30
 
 
@@ -100,6 +104,103 @@ def flash_decode_pallas(q, k_cache, v_cache, pos, *, block_s: int = 512,
         ),
         out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(pos.astype(jnp.int32), q, k_cache, v_cache)
+
+
+# ----------------------------------------------------------------------
+# paged variant: KV lives in a shared page pool; the per-sequence page
+# table is scalar-prefetched and drives the K/V BlockSpec index map, so
+# each program DMAs exactly the physical page it needs — the kernel
+# never sees (or pays HBM traffic for) another sequence's pages, and no
+# dense [B, S] view is ever materialized.
+# ----------------------------------------------------------------------
+
+
+def _paged_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size: int, n_pages: int,
+                  scale: float):
+    b = pl.program_id(0)
+    pb = pl.program_id(2)
+
+    @pl.when(pb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)              # [ps, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    offs = pb * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = (offs <= pos_ref[b]) & (pt_ref[b, pb] >= 0)
+    s = jnp.where(valid, s, _NEG)                       # [G, ps]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(pb == n_pages - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged(q, k_pool, v_pool, pos, page_table, *,
+                       interpret: bool = True):
+    """Paged flash decode.  q: [B, KV, G, hd]; k/v_pool:
+    [num_pages, page_size, KV, hd] (bf16 or fp8); pos: [B] int32;
+    page_table: [B, Pmax] int32 physical page ids (-1 = hole; holes and
+    positions > pos are masked).  Returns [B, KV, G, hd] in q.dtype.
+
+    Grid (batch, kv_head, logical_page): the page dimension is innermost
+    and sequential, carrying online-softmax state; the K/V index map
+    reads the prefetched page table, i.e. the address translation
+    happens at DMA-issue time on the scalar core.
+    """
+    b, kv, g, hd = q.shape
+    num_pages, ps, kv_p, _ = k_pool.shape
+    assert kv_p == kv, (kv_p, kv)
+    pmax = page_table.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(_paged_kernel, page_size=ps, n_pages=pmax,
+                               scale=scale)
+
+    def kv_map(i, j, pb, pos, pt):
+        return (jnp.maximum(pt[i, pb], 0), 0, j, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, kv, pmax),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd),
+                             lambda i, j, pb, pos, pt: (i, j, 0, 0)),
+                pl.BlockSpec((1, ps, 1, hd), kv_map),
+                pl.BlockSpec((1, ps, 1, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda i, j, pb, pos, pt: (i, j, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(pos.astype(jnp.int32), page_table.astype(jnp.int32),
+      q, k_pool, v_pool)

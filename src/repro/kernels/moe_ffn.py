@@ -27,6 +27,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 
 def _kernel(tile_group, x_ref, w_ref, out_ref, acc_ref, *, k_tiles: int):
     ki = pl.program_id(2)
@@ -82,6 +86,6 @@ def grouped_ffn_pallas(x, w, tile_group, *, tile_m: int = 0,
         ),
         out_shape=jax.ShapeDtypeStruct((c, f), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
     )(tile_group.astype(jnp.int32), x, w)

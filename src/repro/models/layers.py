@@ -351,6 +351,90 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                        dtype=jnp.bfloat16, tp: int = 1):
+    """Flat page pool shared by all sequences of one attention layer.
+
+    Layout [num_pages, page_size, kv, head_dim]: (page, offset) flattens
+    to one linear token index, so reads/writes are single gathers and
+    scatters over a ``[num_pages * page_size, kv, hd]`` view."""
+    dims = attn_dims(cfg, tp)
+    shape = (num_pages, page_size, dims.kv, dims.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode_paged(cfg: ModelConfig, params, x, cache, page_table,
+                           pos, *, window: Optional[int] = None, dims=None,
+                           rope: bool = True, dist=None):
+    """Single-token decode against a *paged* KV pool.
+
+    x: [B, 1, d]; cache k/v: [P, ps, KV, hd] (the shared page pool);
+    page_table: [B, Pmax] physical page per logical page (-1 = hole);
+    pos: [B] absolute position of the new token.  The new token's page
+    must already be mapped (the engine's allocator guarantees it);
+    writes through an unmapped table entry are dropped, so padding rows
+    (page_table row of -1s) are harmless.  Returns (out, new_cache).
+
+    Sliding-window layers store the full sequence in pages and mask the
+    window at read time — unlike the dense rolling buffer this keeps
+    positions linear, so padded prefill garbage can never alias a live
+    slot.
+    """
+    b, s1, d = x.shape
+    assert s1 == 1
+    dims = dims or attn_dims(cfg)
+    num_pages, ps, kvh, hd = cache["k"].shape
+    pmax = page_table.shape[1]
+    q = (x @ params["wq"]).reshape(b, 1, dims.heads, dims.head_dim)
+    k = (x @ params["wk"]).reshape(b, 1, dims.kv, dims.head_dim)
+    v = (x @ params["wv"]).reshape(b, 1, dims.kv, dims.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if rope:
+        q = apply_rope(q, pos[:, None, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None, None], cfg.rope_theta)
+
+    # write the new token through the page table (1-scatter on the flat
+    # token view; unmapped pages -> OOB index -> dropped)
+    lp = jnp.minimum(pos // ps, pmax - 1)
+    phys = page_table[jnp.arange(b), lp]                       # [B]
+    flat_idx = jnp.where(phys >= 0, phys * ps + pos % ps, num_pages * ps)
+    kf = cache["k"].reshape(num_pages * ps, kvh, hd)
+    vf = cache["v"].reshape(num_pages * ps, kvh, hd)
+    kf = kf.at[flat_idx].set(k[:, 0].astype(kf.dtype), mode="drop")
+    vf = vf.at[flat_idx].set(v[:, 0].astype(vf.dtype), mode="drop")
+    new_cache = {"k": kf.reshape(num_pages, ps, kvh, hd),
+                 "v": vf.reshape(num_pages, ps, kvh, hd)}
+
+    # page-table-indexed read: gather this batch's pages into a
+    # [B, KV, Pmax*ps, hd] view (the Pallas paged kernel streams the
+    # same pages without materializing the view; kernels/flash_decode)
+    pt_safe = jnp.maximum(page_table, 0)
+    kg = new_cache["k"][pt_safe].reshape(b, pmax * ps, kvh, hd)
+    vg = new_cache["v"][pt_safe].reshape(b, pmax * ps, kvh, hd)
+    kg = kg.transpose(0, 2, 1, 3)
+    vg = vg.transpose(0, 2, 1, 3)
+    if kg.dtype.itemsize == 1:          # fp8 pool: dequantize for dots
+        kg = kg.astype(jnp.bfloat16)
+        vg = vg.astype(jnp.bfloat16)
+
+    q = q.reshape(b, dims.kv, dims.group, dims.head_dim)
+    scale = 1.0 / np.sqrt(dims.head_dim)
+    logits = jnp.einsum("bkgh,bksh->bkgs", q, kg,
+                        preferred_element_type=jnp.float32) * scale
+    spos = jnp.arange(pmax * ps)
+    valid = (spos[None, :] <= pos[:, None]) & \
+        jnp.repeat(page_table >= 0, ps, axis=1)
+    if window:
+        valid &= spos[None, :] > pos[:, None] - window
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1).astype(vg.dtype)
+    o = jnp.einsum("bkgs,bksh->bkgh", p, vg)
+    o = o.reshape(b, 1, dims.heads * dims.head_dim)
+    return o @ params["wo"], new_cache
+
+
 def attention_decode(cfg: ModelConfig, params, x, cache, pos, *,
                      window: Optional[int] = None, dims=None,
                      rope: bool = True, dist=None):

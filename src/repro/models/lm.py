@@ -131,6 +131,121 @@ def init_cache(cfg: ModelConfig, dist: Dist, batch: int, max_len: int,
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, dist: Dist, num_pages: int,
+                     page_size: int, max_batch: int, dtype=jnp.bfloat16):
+    """Serving cache with paged attention layers: per attention layer a
+    shared page pool [n_blocks, num_pages, page_size, kv, hd]; mamba
+    layers keep per-slot state (their state is O(1) per sequence, there
+    is nothing to page)."""
+    kinds = cfg.layer_kinds()
+    n_blocks = cfg.num_layers // len(kinds)
+    cache = {}
+    for i, (mixer, _) in enumerate(kinds):
+        if mixer.startswith("attn"):
+            c = L.init_paged_kv_cache(cfg, num_pages, page_size, dtype,
+                                      tp=dist.ep_size)
+        elif mixer == "mamba":
+            c = M.init_mamba_cache(cfg, max_batch, dtype)
+        else:
+            continue
+        cache[f"l{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_blocks,) + a.shape), c)
+    return cache
+
+
+def init_wave_cache(cfg: ModelConfig, dist: Dist, batch: int, length: int,
+                    dtype=jnp.bfloat16):
+    """Scratch cache for one batched prefill wave: attention buffers are
+    FULL length (never rolling) so every position lands at its own index
+    and can be scattered into the serving cache afterwards."""
+    kinds = cfg.layer_kinds()
+    n_blocks = cfg.num_layers // len(kinds)
+    cache = {}
+    for i, (mixer, _) in enumerate(kinds):
+        if mixer.startswith("attn"):
+            c = L.init_kv_cache(cfg, batch, length, None, dtype,
+                                tp=dist.ep_size)
+        elif mixer == "mamba":
+            c = M.init_mamba_cache(cfg, batch, dtype)
+        else:
+            continue
+        cache[f"l{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_blocks,) + a.shape), c)
+    return cache
+
+
+def merge_wave_cache(cfg: ModelConfig, cache, wave_cache, slot_idx,
+                     lengths, *, page_table=None, page_size: int = 0):
+    """Scatter a prefill wave's filled scratch cache into the serving
+    cache (jit-traceable; called inside the wave-prefill step).
+
+    cache: engine cache — paged pools when ``page_table`` is given, else
+    dense per-slot buffers.  wave_cache: from :func:`init_wave_cache`
+    after ``apply_lm(mode="prefill")``.  slot_idx: [B] engine slot per
+    wave row (out-of-range = padding row, dropped).  lengths: [B] true
+    prompt lengths (positions beyond a row's length are not scattered
+    into pages).  page_table: [B, Pmax] physical page per logical page.
+    """
+    wb = len(slot_idx)
+    out = {}
+    for li, full in cache.items():
+        wave = wave_cache[li]
+        if "conv" in full:                       # mamba: per-slot rows
+            out[li] = jax.tree.map(
+                lambda f, p: f.at[:, slot_idx].set(
+                    p.astype(f.dtype), mode="drop"), full, wave)
+            continue
+        # attention: wave k/v [nb, B, kv, L, hd]
+        l_pad = wave["k"].shape[3]
+        if page_table is not None:
+            ps = page_size
+            tt = jnp.broadcast_to(jnp.arange(l_pad), (wb, l_pad))
+            phys = jnp.take_along_axis(page_table, tt // ps, axis=1)
+            valid = (tt < lengths[:, None]) & (phys >= 0)
+            num_pages = full["k"].shape[1]
+            flat_idx = jnp.where(valid, phys * ps + tt % ps,
+                                 num_pages * ps).reshape(-1)
+
+            def scatter(pool, w):
+                nb, p, ps_, kvh, hd = pool.shape
+                vals = w.transpose(0, 1, 3, 2, 4).reshape(
+                    nb, wb * l_pad, kvh, hd)
+                flat = pool.reshape(nb, p * ps_, kvh, hd)
+                flat = flat.at[:, flat_idx].set(
+                    vals.astype(flat.dtype), mode="drop")
+                return flat.reshape(pool.shape)
+
+            out[li] = {k: scatter(full[k], wave[k]) for k in ("k", "v")}
+        else:
+            s_buf = full["k"].shape[3]
+            if l_pad <= s_buf:
+                out[li] = {
+                    k: full[k].at[:, slot_idx, :, :l_pad].set(
+                        wave[k].astype(full[k].dtype), mode="drop")
+                    for k in ("k", "v")}
+            else:
+                # rolling (SWA) buffer: keep each row's last s_buf REAL
+                # positions at slots p % s_buf (attention_decode's
+                # mapping).  Per-row gather — taking the padded tail
+                # would both store garbage keys and roll real in-window
+                # context out of the buffer.
+                sel = jnp.asarray(slot_idx)[:, None]
+                src_pos = lengths[:, None] - s_buf + \
+                    jnp.arange(s_buf)[None, :]          # [B, s_buf]
+                dst = jnp.where(src_pos >= 0, src_pos % s_buf, s_buf)
+
+                def roll(f, w):
+                    g = jnp.take_along_axis(
+                        w, jnp.clip(src_pos, 0, l_pad - 1)[
+                            None, :, None, :, None], axis=3)
+                    vals = g.transpose(1, 3, 0, 2, 4)   # [B,s_buf,nb,kv,hd]
+                    return f.at[:, sel, :, dst].set(
+                        vals.astype(f.dtype), mode="drop")
+
+                out[li] = {k: roll(full[k], wave[k]) for k in ("k", "v")}
+    return out
+
+
 def cache_pspec(cfg: ModelConfig, dist: Dist, long_context: bool = False):
     """PartitionSpecs for the cache pytree (for dry-run in_shardings).
 
@@ -179,18 +294,53 @@ def cast_params(params, dtype=jnp.bfloat16):
         if hasattr(a, "dtype") and a.dtype == jnp.float32 else a, params)
 
 
-def _mixer_apply(cfg, dist, lp, mixer, x, *, mode, lc, pos, chunk):
-    """Apply attention/mamba; returns (y, new_layer_cache or {})."""
+def _mixer_apply(cfg, dist, lp, mixer, x, *, mode, lc, pos, chunk,
+                 slot_idx=None, page_table=None, row_valid=None):
+    """Apply attention/mamba; returns (y, new_layer_cache or {}).
+
+    Decode-time serving extensions: ``slot_idx`` gathers only the active
+    cache rows into the (bucketed) batch and scatters updates back
+    (out-of-range entries are padding rows and are dropped);
+    ``page_table`` switches attention layers to the paged KV pool.
+    """
     window = cfg.sliding_window if mixer == "attn_swa" else None
     if mixer == "mamba":
         if mode == "decode":
-            return M.mamba_decode(cfg, lp["mamba"], x, lc, dist=dist)
+            if slot_idx is None:
+                return M.mamba_decode(cfg, lp["mamba"], x, lc, dist=dist)
+            rows = jax.tree.map(
+                lambda a: a[jnp.minimum(slot_idx, a.shape[0] - 1)], lc)
+            y, nc = M.mamba_decode(cfg, lp["mamba"], x, rows, dist=dist)
+            nc = jax.tree.map(
+                lambda full, part: full.at[slot_idx].set(
+                    part.astype(full.dtype), mode="drop"), lc, nc)
+            return y, nc
+        # prefill on a length-padded batch: hand the decode cache off at
+        # each row's true last position (the recurrence has no position
+        # mask, so the final state would have absorbed padding tokens)
+        lengths = (jnp.sum(row_valid, axis=1)
+                   if mode == "prefill" and row_valid is not None
+                   and row_valid.ndim == 2 else None)
         y, st = M.mamba_train(cfg, lp["mamba"], x, dist=dist,
-                              return_state=(mode == "prefill"))
+                              return_state=(mode == "prefill"),
+                              lengths=lengths)
         return y, (st if mode == "prefill" else {})
     dims = L.attn_dims(cfg, dist.ep_size)
     # attention
     if mode == "decode":
+        if page_table is not None:
+            return L.attention_decode_paged(
+                cfg, lp["attn"], x, lc, page_table, pos,
+                window=window, dims=dims, dist=dist)
+        if slot_idx is not None:
+            rows = {k: v[jnp.minimum(slot_idx, v.shape[0] - 1)]
+                    for k, v in lc.items()}
+            y, nc_rows = L.attention_decode(cfg, lp["attn"], x, rows, pos,
+                                            window=window, dims=dims,
+                                            dist=dist)
+            nc = {k: lc[k].at[slot_idx].set(nc_rows[k], mode="drop")
+                  for k in lc}
+            return y, nc
         return L.attention_decode(cfg, lp["attn"], x, lc, pos,
                                   window=window, dims=dims, dist=dist)
     y, kv = L.attention_train(cfg, lp["attn"], x, window=window, dims=dims,
@@ -232,8 +382,17 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
              moe_impl: str = "ragged", chunk: int = 1024,
              remat: bool = False, capacity_factor: float = 1.25,
              use_pallas_route: bool = False, frames=None,
-             compute_dtype=jnp.bfloat16, remat_policy: str = "dots_no_batch"):
-    """Returns (logits, new_cache, stats)."""
+             compute_dtype=jnp.bfloat16, remat_policy: str = "dots_no_batch",
+             slot_idx=None, page_table=None, row_valid=None):
+    """Returns (logits, new_cache, stats).
+
+    Serving (decode) extras: ``slot_idx`` [B] selects which cache rows
+    this (bucketed) batch occupies; ``page_table`` [B, Pmax] switches
+    attention to paged-KV pools (cache from :func:`init_paged_cache`);
+    ``row_valid`` (bool, [B] decode / [B, S] prefill) keeps padding
+    tokens out of MoE routing, making routing decisions — and therefore
+    the numerics — invariant to batch-bucket and length padding.
+    """
     if cfg.family == "encdec":
         from repro.models import encdec
         return encdec.apply_encdec(
@@ -265,7 +424,9 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
             lp = bp[li]
             h = L.apply_norm(cfg, lp["norm1"], x)
             y, nc = _mixer_apply(cfg, dist, lp, mixer, h, mode=mode,
-                                 lc=bc.get(li), pos=pos, chunk=chunk)
+                                 lc=bc.get(li), pos=pos, chunk=chunk,
+                                 slot_idx=slot_idx, page_table=page_table,
+                                 row_valid=row_valid)
             if nc:
                 new_bc[li] = nc
             x = x + y
@@ -280,14 +441,16 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
                             cfg, dist, lp["moe"], brt[li], h2f, algo=algo,
                             impl=moe_impl, mode="features",
                             capacity_factor=capacity_factor,
-                            use_pallas_route=use_pallas_route)
+                            use_pallas_route=use_pallas_route,
+                            row_valid=row_valid)
                         y2 = y2[:, None]
                     else:
                         y2, st = MOE.moe_ffn(
                             cfg, dist, lp["moe"], brt[li], h2, algo=algo,
                             impl=moe_impl, mode="tokens",
                             capacity_factor=capacity_factor,
-                            use_pallas_route=use_pallas_route)
+                            use_pallas_route=use_pallas_route,
+                            row_valid=row_valid)
                     stats_l.append(st)
                 x = x + y2.astype(x.dtype)
         if stats_l:

@@ -68,11 +68,18 @@ def _ssm_params(cfg, params, xm):
 
 
 def mamba_train(cfg: ModelConfig, params, x, *, chunk: int = 128,
-                dist=None, return_state: bool = False):
+                dist=None, return_state: bool = False, lengths=None):
     """Full-sequence mamba block. x: [B, S, d] -> ([B, S, d], state).
 
     state (when return_state, for prefill cache handoff) is the decode
-    cache: {"conv": last K-1 pre-conv inputs, "h": final SSM state}."""
+    cache: {"conv": last K-1 pre-conv inputs, "h": final SSM state}.
+
+    ``lengths`` [B] (with return_state) makes the handoff per-row: the
+    recurrence has no position mask, so on a length-padded batch the
+    *final* state has absorbed the padding tokens — here the state is
+    instead read at each row's true last position and the conv window
+    is the K-1 real inputs before it, exactly what step-by-step decode
+    would have produced."""
     b, s, d = x.shape
     di = cfg.ssm_expand * d
     n = cfg.ssm_state
@@ -99,6 +106,8 @@ def mamba_train(cfg: ModelConfig, params, x, *, chunk: int = 128,
     n_chunks = s_pad // chunk
     xf = xm.astype(jnp.float32)
 
+    collect = return_state and lengths is not None
+
     def chunk_body(h, idx):
         sl = lambda v: jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, 1)
         dt_c, b_c, c_c, x_c = sl(dt), sl(bt), sl(ct), sl(xf)
@@ -114,10 +123,10 @@ def mamba_train(cfg: ModelConfig, params, x, *, chunk: int = 128,
             combine, (decay, inp), axis=1)
         h_t = acc_a * h[:, None] + acc_u                        # [B,c,di,N]
         y_c = jnp.einsum("bcin,bcn->bci", h_t, c_c)
-        return h_t[:, -1], y_c
+        return h_t[:, -1], (y_c, h_t if collect else h_t[:, :0])
 
     h0 = jnp.zeros((b, di, n), jnp.float32)
-    h_final, ys = jax.lax.scan(chunk_body, h0, jnp.arange(n_chunks))
+    h_final, (ys, hs) = jax.lax.scan(chunk_body, h0, jnp.arange(n_chunks))
     y = ys.transpose(1, 0, 2, 3).reshape(b, s_pad, di)[:, :s]
     y = y + xf[:, :s] * params["D"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
@@ -126,9 +135,21 @@ def mamba_train(cfg: ModelConfig, params, x, *, chunk: int = 128,
         out = dist.shard(out, dist.dp_axes, None, None)
     if return_state:
         k = cfg.ssm_conv
-        conv_cache = jnp.pad(
-            xm_raw, ((0, 0), (max(k - 1 - s, 0), 0), (0, 0)))[:, -(k - 1):]
-        return out, {"conv": conv_cache, "h": h_final}
+        if lengths is None:
+            conv_cache = jnp.pad(
+                xm_raw, ((0, 0), (max(k - 1 - s, 0), 0), (0, 0)))[:, -(k - 1):]
+            return out, {"conv": conv_cache, "h": h_final}
+        # per-row handoff at position lengths[b]-1
+        hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, s_pad, di, n)
+        idx = jnp.clip(lengths - 1, 0, s_pad - 1)
+        h_state = jnp.take_along_axis(
+            hs, idx[:, None, None, None], axis=1)[:, 0]
+        h_state = jnp.where((lengths > 0)[:, None, None], h_state, 0.0)
+        pos = lengths[:, None] - (k - 1) + jnp.arange(k - 1)[None, :]
+        g = jnp.take_along_axis(
+            xm_raw, jnp.clip(pos, 0, s - 1)[:, :, None], axis=1)
+        conv_cache = jnp.where((pos >= 0)[:, :, None], g, 0)
+        return out, {"conv": conv_cache, "h": h_state}
     return out, {}
 
 

@@ -45,6 +45,17 @@ from repro.core import routing as core_routing
 from repro.core.types import Placement
 from repro.sharding.policy import Dist
 
+# jax.shard_map became a top-level API only recently; older releases
+# keep it in jax.experimental with `check_rep` instead of `check_vma`
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
 _INT = jnp.int32
 
 
@@ -271,10 +282,18 @@ def _shared_expert(cfg: ModelConfig, params, x):
 
 def _moe_inner(cfg: ModelConfig, params, tables, x, *, algo, lo, s_loc,
                capacity, tile, impl, ep_size, slots_per_device,
-               use_pallas_route=False, with_stats=True):
+               use_pallas_route=False, with_stats=True, row_valid=None):
     """Router + routing + local grouped FFN. x: [T, d] (full EP-group
-    tokens). Returns (partial_out [T, d] f32, stats)."""
+    tokens). Returns (partial_out [T, d] f32, stats).
+
+    ``row_valid`` [T] masks padding rows out of routing entirely: their
+    top-k choices become -1 pads, so they never skew the histogram,
+    EPLB round-robin ranks, METRO's activation decisions, or the
+    expert-load stats that drive rebalancing — and routing becomes
+    bitwise-invariant to how much a serving batch was padded."""
     ids, gates, probs = gating(cfg, params["w_router"], x)
+    if row_valid is not None:
+        ids = jnp.where(row_valid[:, None], ids, -1)
     hist = core_routing.topk_histogram(ids, cfg.num_experts)
     slots = core_routing.route(
         algo, ids, hist, tables["expert_slots"], tables["num_replicas"],
@@ -314,13 +333,16 @@ def _capacity(t_group: int, k: int, *, algo: str, mode: str, ep: int,
 def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
             algo: str = "eplb", capacity_factor: float = 1.25,
             impl: str = "ragged", tile: int = 8, mode: str = "tokens",
-            use_pallas_route: bool = False):
+            use_pallas_route: bool = False, row_valid=None):
     """MoE FFN over x: [B, S, d] (tokens mode) or [T, d] (features mode).
 
     tokens mode: x sequence-sharded over EP axis -> paper's all-gather
     dispatch on tokens (per data row; fe shards FSDP-gathered per layer).
     features mode (decode): full-mesh EP x ETP, weights never move.
     Virtual-EP local fallback when no mesh is active.
+
+    ``row_valid`` (bool, x's token shape — [B, S] or [T]) excludes
+    padding tokens from routing (see :func:`_moe_inner`).
     """
     squeeze = x.ndim == 3
     d = x.shape[-1]
@@ -330,13 +352,15 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
     if dist.mesh is None or dist.tp_axis is None:
         # virtual EP: all slots local, same math, no collectives
         x2 = x.reshape(-1, d) if squeeze else x
+        rv = row_valid.reshape(-1) if row_valid is not None else None
         capacity = _capacity(x2.shape[0], k, algo=algo, mode="local", ep=ep,
                              s_loc=ep * spd, tile=tile,
                              capacity_factor=capacity_factor)
         out, stats = _moe_inner(
             cfg, params, tables, x2, algo=algo, lo=0, s_loc=ep * spd,
             capacity=capacity, tile=tile, impl=impl, ep_size=ep,
-            slots_per_device=spd, use_pallas_route=use_pallas_route)
+            slots_per_device=spd, use_pallas_route=use_pallas_route,
+            row_valid=rv)
         out = out.astype(x.dtype)
         return (out.reshape(x.shape) if squeeze else out), stats
 
@@ -375,6 +399,8 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
 
     if mode == "tokens":
         b, s, _ = x.shape
+        rv_full = (row_valid if row_valid is not None
+                   else jnp.ones((b, s), bool))
         # sequence sharded over EP axis when divisible (paper's SP
         # dispatch); otherwise x enters replicated and gather is a no-op.
         gather = s % ep == 0
@@ -385,8 +411,9 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
                              s_loc=spd, tile=tile,
                              capacity_factor=capacity_factor)
         x_spec = P(dp if dp_ok else None, ax if gather else None, None)
+        rv_spec = P(dp if dp_ok else None, ax if gather else None)
 
-        def body(xb, w_up, w_down, w_router, shared, es, nr):
+        def body(xb, rvb, w_up, w_down, w_router, shared, es, nr):
             rank = jax.lax.axis_index(ax)
             # FSDP-gather the fe shards within the data row (cast to the
             # compute dtype first: halves the gather traffic)
@@ -398,6 +425,8 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
                                             tiled=True)
             xg = (jax.lax.all_gather(xb, ax, axis=1, tiled=True)
                   if gather else xb)
+            rvg = (jax.lax.all_gather(rvb, ax, axis=1, tiled=True)
+                   if gather else rvb)
             bl = xg.shape[0]
             x2 = xg.reshape(-1, d)
             p = {"w_router": w_router, "w_up": w_up, "w_down": w_down}
@@ -411,7 +440,8 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
                 cfg, p, {"expert_slots": es, "num_replicas": nr}, x2,
                 algo=algo, lo=rank * spd, s_loc=spd, capacity=capacity,
                 tile=tile, impl=impl, ep_size=ep, slots_per_device=spd,
-                use_pallas_route=use_pallas_route)
+                use_pallas_route=use_pallas_route,
+                row_valid=rvg.reshape(-1))
             out = out.astype(xb.dtype).reshape(bl, -1, d)
             if gather:
                 out = jax.lax.psum_scatter(out, ax, scatter_dimension=1,
@@ -420,13 +450,14 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
                 out = jax.lax.psum(out, ax)
             return out, _reduce_stats(stats, all_axes)
 
-        out, stats = jax.shard_map(
+        out, stats = _shard_map(
             body, mesh=mesh,
-            in_specs=(x_spec, wup_spec, wdn_spec, P(), shared_spec,
-                      P(), P()),
+            in_specs=(x_spec, rv_spec, wup_spec, wdn_spec, P(),
+                      shared_spec, P(), P()),
             out_specs=(x_spec, P()),
             check_vma=False,
-        )(x, params["w_up"], params["w_down"], params["w_router"], shared,
+        )(x, rv_full, params["w_up"], params["w_down"],
+          params["w_router"], shared,
           tables["expert_slots"], tables["num_replicas"])
         return out, stats
 
@@ -436,6 +467,7 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
     #   over "pod"... sharded over pod when divisible.
     # ------------------------------------------------------------------
     t = x.shape[0]
+    rv_full = row_valid if row_valid is not None else jnp.ones((t,), bool)
     pod = tuple(a for a in dp if a != etp)         # ("pod",) or ()
     pod_size = int(np.prod([mesh.shape[a] for a in pod])) if pod else 1
     pod_ok = pod and t % pod_size == 0
@@ -447,8 +479,9 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
     gx = int(np.prod([mesh.shape[a] for a in gather_axes]))
     gather = d % gx == 0
     x_spec = P(pod if pod_ok else None, gather_axes if gather else None)
+    rv_spec = P(pod if pod_ok else None)
 
-    def body_f(xb, w_up, w_down, w_router, shared, es, nr):
+    def body_f(xb, rvb, w_up, w_down, w_router, shared, es, nr):
         rank = jax.lax.axis_index(ax)
         xg = (jax.lax.all_gather(xb, gather_axes, axis=1, tiled=True)
               if gather else xb)
@@ -459,7 +492,7 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
             cfg, p, {"expert_slots": es, "num_replicas": nr}, xg,
             algo=algo, lo=rank * spd, s_loc=spd, capacity=capacity,
             tile=tile, impl=impl, ep_size=ep, slots_per_device=spd,
-            use_pallas_route=use_pallas_route)
+            use_pallas_route=use_pallas_route, row_valid=rvb)
         # combine over slots (EP axis) AND fe shards (ETP axis) in one
         # collective; weights never moved.
         if gather:
@@ -469,11 +502,12 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
             out = jax.lax.psum(out, gather_axes)
         return out.astype(xb.dtype), _reduce_stats(stats, all_axes)
 
-    out, stats = jax.shard_map(
+    out, stats = _shard_map(
         body_f, mesh=mesh,
-        in_specs=(x_spec, wup_spec, wdn_spec, P(), shared_spec, P(), P()),
+        in_specs=(x_spec, rv_spec, wup_spec, wdn_spec, P(), shared_spec,
+                  P(), P()),
         out_specs=(x_spec, P()),
         check_vma=False,
-    )(x, params["w_up"], params["w_down"], params["w_router"], shared,
-      tables["expert_slots"], tables["num_replicas"])
+    )(x, rv_full, params["w_up"], params["w_down"], params["w_router"],
+      shared, tables["expert_slots"], tables["num_replicas"])
     return out, stats

@@ -1,4 +1,11 @@
 from repro.serving.engine import ServingEngine, EngineConfig, Request
+from repro.serving.kv import PagedKVManager, pages_for
 from repro.serving.slo import SLOTracker
+from repro.serving.traffic import (SyntheticRequest, TrafficConfig,
+                                   generate_trace, replay_closed_loop,
+                                   replay_open_loop)
 
-__all__ = ["ServingEngine", "EngineConfig", "Request", "SLOTracker"]
+__all__ = ["ServingEngine", "EngineConfig", "Request", "SLOTracker",
+           "PagedKVManager", "pages_for", "TrafficConfig",
+           "SyntheticRequest", "generate_trace", "replay_open_loop",
+           "replay_closed_loop"]

@@ -6,24 +6,41 @@ selectable per phase — METRO for the memory-bound decode phase, EPLB's
 round-robin for prefill (exactly the paper's deployment).
 
 Engine loop per iteration (vLLM-style):
-  1. admit waiting requests into free slots (up to max_batch),
-  2. if any admitted this round: run one (chunked) prefill per request,
-  3. run one decode step for the whole active batch,
+  1. admit waiting requests into free slots (and, for the paged KV
+     layout, reserve their prompt pages from the shared pool),
+  2. run ONE batched chunked prefill over the admitted wave — prompts
+     are packed into a single padded ``[B, L]`` call so METRO/EPLB
+     routing sees realistic mixed-length batches,
+  3. run one decode step for the active set, gathered into the smallest
+     power-of-two batch bucket (``bucket_mode="pow2"``) instead of
+     always padding to ``max_batch``,
   4. retire finished requests; every ``rebalance_every`` decode steps,
      recompute EPLB placement from the observed expert-load EWMA and
-     reshuffle the physical expert weights (weight "shuffling" is a
-     gather over the logical master copy, as vLLM's EPLB does).
+     reshuffle the physical expert weights.
 
 Batch-size bucketing mirrors the paper's CUDA-graph integration (§V):
-decode steps are jitted per power-of-two batch bucket and smaller
-batches pad to the bucket, so step functions compile once per bucket.
+step functions are jitted once per (bucket, padded-length) signature and
+reused for every batch that rounds up to it; the ``SLOTracker`` counts
+each fresh compile, so compile traffic is O(log max_batch · log max_len)
+on any trace.
+
+KV storage is paged by default (``kv_layout="paged"``): attention layers
+share a flat pool of fixed-size pages (``serving/kv.py``), each sequence
+owns only the pages its tokens occupy, and page tables are step *inputs*
+— growing a sequence or admitting past the dense-residency limit never
+recompiles.  When the pool runs dry the engine preempts the youngest
+sequence (free its pages, requeue, recompute on readmission), so
+``max_batch`` can exceed the worst-case-resident limit
+``num_pages * page_size / max_len``.  ``kv_layout="dense"`` keeps the
+seed's ``[max_batch, max_len]`` buffers for A/B comparison, and
+``bucket_mode="fixed"`` + ``batch_prefill=False`` reproduces the seed
+scheduler exactly.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from functools import partial
 from typing import Optional
 
 import jax
@@ -33,6 +50,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import build_placement
 from repro.models import lm as LM
+from repro.serving.kv import PagedKVManager, pages_for
 from repro.serving.slo import SLOTracker
 from repro.sharding.policy import Dist
 
@@ -46,12 +64,21 @@ class Request:
     slot: int = -1
     pos: int = 0                # next position to fill
     done: bool = False
+    preempted: int = 0          # times evicted under page pressure
+
+    def context_tokens(self) -> np.ndarray:
+        """Tokens to (re)prefill: the prompt plus anything generated
+        before a preemption (recompute-on-readmission)."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
 
 
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 8          # decode slots
-    max_len: int = 256          # KV capacity per slot
+    max_len: int = 256          # KV capacity per sequence
     replication_ratio: float = 1.25
     decode_algo: str = "metro"  # the paper's technique
     prefill_algo: str = "eplb"
@@ -60,11 +87,29 @@ class EngineConfig:
     prefill_chunk: int = 64     # chunked prefill (sarathi-style)
     greedy: bool = True
     seed: int = 0
+    # --- scheduling ---
+    bucket_mode: str = "pow2"   # "pow2" | "fixed" (seed: pad to max_batch)
+    batch_prefill: bool = True  # pack the admitted wave into one call
+    max_wave: int = 0           # prefill wave cap; 0 -> max_batch
+    bucket_compile_grace: int = 4   # steps a cold bucket rounds up to a
+                                    # compiled one before earning its own
+                                    # compile (0 = always compile exact)
+    # --- KV layout ---
+    kv_layout: str = "paged"    # "paged" | "dense" (seed layout)
+    page_size: int = 16         # tokens per KV page
+    num_pages: int = 0          # pool size; 0 -> full residency
+                                #   (max_batch * ceil(max_len/page_size))
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, (int(n) - 1).bit_length())
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, dist: Dist, params,
                  ecfg: EngineConfig, routing_table_width: int = 0):
+        assert ecfg.bucket_mode in ("pow2", "fixed"), ecfg.bucket_mode
+        assert ecfg.kv_layout in ("paged", "dense"), ecfg.kv_layout
         self.cfg = cfg
         self.dist = dist
         self.ecfg = ecfg
@@ -77,6 +122,7 @@ class ServingEngine:
         self.decode_steps = 0
         self.expert_loads = np.ones(max(cfg.num_experts, 1))
         self._table_width = routing_table_width
+        self._next_rid = 0
 
         if cfg.is_moe:
             self.placement = build_placement(
@@ -94,9 +140,20 @@ class ServingEngine:
         else:
             self.placement, self.routing = None, {}
 
-        self.cache = LM.init_cache(cfg, dist, ecfg.max_batch, ecfg.max_len)
-        self._decode_fns = {}
-        self._prefill_fns = {}
+        if ecfg.kv_layout == "paged":
+            pmax = pages_for(ecfg.max_len, ecfg.page_size)
+            num_pages = ecfg.num_pages or ecfg.max_batch * pmax
+            self.kvman: Optional[PagedKVManager] = PagedKVManager(
+                num_pages=num_pages, page_size=ecfg.page_size,
+                max_pages_per_seq=pmax, max_seqs=ecfg.max_batch)
+            self.cache = LM.init_paged_cache(
+                cfg, dist, num_pages, ecfg.page_size, ecfg.max_batch)
+        else:
+            self.kvman = None
+            self.cache = LM.init_cache(cfg, dist, ecfg.max_batch,
+                                       ecfg.max_len)
+        self._fns: dict[str, dict] = {"decode": {}, "prefill": {}}
+        self._bucket_demand: dict[int, int] = {}
 
     # ------------------------------------------------------------------
     # weight reshuffling (EPLB rebalance)
@@ -137,81 +194,140 @@ class ServingEngine:
         put(self.params["blocks"])
 
     # ------------------------------------------------------------------
-    # step functions (bucketed)
+    # step functions (compiled once per shape signature)
     # ------------------------------------------------------------------
+    def _get_fn(self, kind: str, key, builder):
+        fns = self._fns[kind]
+        if key not in fns:
+            fns[key] = builder()
+            self.slo.compiled(kind, key)
+        return fns[key]
+
     def _decode_fn(self, bucket: int):
-        if bucket not in self._decode_fns:
-            cfg, dist = self.cfg, self.dist
+        def build():
+            cfg, dist, ecfg = self.cfg, self.dist, self.ecfg
+            paged = ecfg.kv_layout == "paged"
 
             @jax.jit
-            def step(params, tokens, pos, cache, routing):
+            def step(params, tokens, pos, slot_idx, page_table, cache,
+                     routing):
                 logits, new_cache, stats = LM.apply_lm(
                     cfg, dist, params, tokens=tokens, pos=pos, cache=cache,
-                    routing=routing, mode="decode",
-                    algo=self.ecfg.decode_algo)
+                    routing=routing, mode="decode", algo=ecfg.decode_algo,
+                    slot_idx=slot_idx,
+                    page_table=page_table if paged else None,
+                    row_valid=slot_idx < ecfg.max_batch)
                 nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
                 return nxt, new_cache, stats
-            self._decode_fns[bucket] = step
-        return self._decode_fns[bucket]
+            return step
+        return self._get_fn("decode", bucket, build)
 
-    def _prefill_fn(self, length: int):
-        if length not in self._prefill_fns:
-            cfg, dist = self.cfg, self.dist
+    def _prefill_fn(self, batch: int, length: int):
+        def build():
+            cfg, dist, ecfg = self.cfg, self.dist, self.ecfg
+            paged = ecfg.kv_layout == "paged"
 
             @jax.jit
-            def step(params, tokens, cache, routing):
-                logits, new_cache, stats = LM.apply_lm(
-                    cfg, dist, params, tokens=tokens, cache=cache,
+            def step(params, tokens, lengths, slot_idx, page_table, cache,
+                     routing):
+                wave = LM.init_wave_cache(cfg, dist, batch, length)
+                _, filled, stats = LM.apply_lm(
+                    cfg, dist, params, tokens=tokens, cache=wave,
                     routing=routing, mode="prefill",
-                    algo=self.ecfg.prefill_algo, chunk=64)
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-                return nxt, new_cache, stats
-            self._prefill_fns[length] = step
-        return self._prefill_fns[length]
+                    algo=ecfg.prefill_algo, chunk=ecfg.prefill_chunk,
+                    row_valid=jnp.arange(length)[None, :]
+                    < lengths[:, None])
+                new_cache = LM.merge_wave_cache(
+                    cfg, cache, filled, slot_idx, lengths,
+                    page_table=page_table if paged else None,
+                    page_size=ecfg.page_size)
+                return new_cache, stats
+            return step
+        return self._get_fn("prefill", (batch, length), build)
 
     # ------------------------------------------------------------------
+    # admission / paging
+    # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
-        rid = len(self.slo.timings)
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
+        prompt = np.asarray(prompt, np.int32)
+        assert len(prompt) < self.ecfg.max_len, (
+            f"prompt of {len(prompt)} tokens exceeds max_len-1="
+            f"{self.ecfg.max_len - 1}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_new_tokens))
         self.slo.arrive(rid, len(prompt))
         return rid
 
-    def _admit(self):
+    def _admit(self) -> list[Request]:
         admitted = []
         while self.queue and self.free_slots:
-            r = self.queue.popleft()
+            r = self.queue[0]
+            n_ctx = min(len(r.context_tokens()), self.ecfg.max_len - 1)
+            if self.kvman is not None:
+                need = pages_for(n_ctx, self.ecfg.page_size)
+                if need > self.kvman.num_free:
+                    break           # FCFS head-of-line: wait for pages
+            self.queue.popleft()
             r.slot = self.free_slots.pop()
+            if self.kvman is not None:
+                ok = self.kvman.ensure(r.slot, n_ctx)
+                assert ok, "admission page reservation failed"
             self.active[r.rid] = r
             admitted.append(r)
         return admitted
 
-    def _bucket(self) -> int:
-        return self.ecfg.max_batch  # fixed-slot engine: pad to max_batch
+    def _preempt_one(self, protect_rid: int) -> bool:
+        """Evict the youngest active request (≠ protect_rid): free its
+        pages + slot and requeue it for recompute-on-readmission."""
+        victims = [r for r in self.active.values() if r.rid != protect_rid]
+        if not victims:
+            return False
+        v = max(victims, key=lambda r: r.rid)
+        self.kvman.release(v.slot)
+        self.free_slots.append(v.slot)
+        del self.active[v.rid]
+        v.slot, v.pos, v.preempted = -1, 0, v.preempted + 1
+        self.queue.appendleft(v)
+        self.slo.preemptions += 1
+        return True
 
-    def _prefill(self, req: Request):
-        """Single-request prefill into its cache slot (padded length)."""
-        n = len(req.prompt)
-        pl = 1 << (n - 1).bit_length()  # pad to pow2 for compile reuse
-        pl = max(pl, 8)
-        toks = np.zeros((1, pl), np.int32)
-        toks[0, :n] = req.prompt
-        cache1 = jax.tree.map(lambda a: a[:, req.slot:req.slot + 1]
-                              if a.ndim >= 2 else a, self.cache)
+    # ------------------------------------------------------------------
+    # prefill (batched wave)
+    # ------------------------------------------------------------------
+    def _prefill_wave(self, wave: list[Request]):
+        group_cap = (self.ecfg.max_wave or self.ecfg.max_batch) \
+            if self.ecfg.batch_prefill else 1
+        for i in range(0, len(wave), group_cap):
+            self._prefill_group(wave[i:i + group_cap])
+
+    def _prefill_group(self, group: list[Request]):
+        ecfg = self.ecfg
+        ctxs = [r.context_tokens() for r in group]
+        lens = [min(len(c), ecfg.max_len - 1) for c in ctxs]
+        b = _pow2(len(group))
+        l_pad = min(max(_pow2(max(lens)), 8), ecfg.max_len)
+        pmax = pages_for(ecfg.max_len, ecfg.page_size)
+        toks = np.zeros((b, l_pad), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        slot_idx = np.full((b,), ecfg.max_batch, np.int32)  # OOB = pad row
+        pt = np.full((b, pmax), -1, np.int32)
+        for i, r in enumerate(group):
+            toks[i, :lens[i]] = ctxs[i][:lens[i]]
+            lengths[i] = lens[i]
+            slot_idx[i] = r.slot
+        if self.kvman is not None:
+            pt[:len(group)] = self.kvman.rows([r.slot for r in group])
+        fn = self._prefill_fn(b, l_pad)
         t0 = time.perf_counter()
-        nxt, new_c1, stats = self._prefill_fn(pl)(
-            self.params, jnp.asarray(toks), cache1, self.routing)
-        nxt.block_until_ready()
+        self.cache, stats = fn(
+            self.params, jnp.asarray(toks), jnp.asarray(lengths),
+            jnp.asarray(slot_idx), jnp.asarray(pt), self.cache,
+            self.routing)
+        jax.block_until_ready(stats)
         self.slo.step("prefill", time.perf_counter() - t0)
-        # note: prefill computed over padded length; positions >= n hold
-        # garbage but are masked at decode by pos-based validity
-        self.cache = jax.tree.map(
-            lambda full, one: full.at[:, req.slot:req.slot + 1].set(one)
-            if full.ndim >= 2 else one, self.cache, new_c1)
-        req.pos = n
-        # first generated token comes from the last *real* position: use
-        # greedy over the prefill logits of position n-1 — the padded
-        # tail means we take the model's next step in decode instead.
+        for r, n in zip(group, lens):
+            r.pos = n
         self._update_loads(stats)
 
     def _update_loads(self, stats):
@@ -222,53 +338,118 @@ class ServingEngine:
             a = self.ecfg.load_ewma
             self.expert_loads = a * self.expert_loads + (1 - a) * (h + 1e-3)
 
+    # ------------------------------------------------------------------
+    # decode (bucketed)
+    # ------------------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        """Decode batch bucket for n active sequences.
+
+        Power-of-two rounding, with a compile-avoidance grace: a bucket
+        nobody has compiled yet first borrows the smallest compiled
+        bucket above it (correct — extra rows are padding) and only
+        earns its own compile after ``bucket_compile_grace`` uses.  This
+        keeps end-of-trace drain-down from compiling each small bucket
+        for a handful of steps, while sustained low occupancy (a long
+        low-rate phase, a straggler tail) still gets its fast bucket.
+        """
+        if self.ecfg.bucket_mode == "fixed":
+            return self.ecfg.max_batch
+        b = min(_pow2(max(n, 1)), self.ecfg.max_batch)
+        fns = self._fns["decode"]
+        if b in fns:
+            return b
+        bigger = [k for k in fns if k > b]
+        if not bigger:
+            return b
+        self._bucket_demand[b] = self._bucket_demand.get(b, 0) + 1
+        if self._bucket_demand[b] > self.ecfg.bucket_compile_grace:
+            return b
+        return min(bigger)
+
+    def _grow_pages(self):
+        """Make sure every active sequence has a page for this step's
+        token, preempting the youngest sequences under pool pressure."""
+        if self.kvman is None:
+            return
+        for r in sorted(self.active.values(), key=lambda r: r.rid):
+            if r.rid not in self.active:    # evicted by a prior grow
+                continue
+            want = min(r.pos + 1, self.ecfg.max_len)
+            while not self.kvman.ensure(r.slot, want):
+                if not self._preempt_one(protect_rid=r.rid):
+                    raise RuntimeError(
+                        "KV page pool exhausted by a single sequence; "
+                        "num_pages must be >= ceil(max_len/page_size)")
+
     def _decode_all(self):
         if not self.active:
             return
-        b = self.ecfg.max_batch
+        self._grow_pages()
+        actives = sorted(self.active.values(), key=lambda r: r.slot)
+        n = len(actives)
+        b = self._bucket(n)
+        ecfg = self.ecfg
+        pmax = pages_for(ecfg.max_len, ecfg.page_size)
         tokens = np.zeros((b, 1), np.int32)
         pos = np.zeros((b,), np.int32)
-        for r in self.active.values():
-            last = (r.generated[-1] if r.generated
-                    else int(r.prompt[-1]))
-            tokens[r.slot, 0] = last
-            pos[r.slot] = r.pos
+        slot_idx = np.full((b,), ecfg.max_batch, np.int32)
+        pt = np.full((b, pmax), -1, np.int32)
+        for i, r in enumerate(actives):
+            tokens[i, 0] = (r.generated[-1] if r.generated
+                            else int(r.context_tokens()[-1]))
+            pos[i] = r.pos
+            slot_idx[i] = r.slot
+        if self.kvman is not None:
+            pt[:n] = self.kvman.rows([r.slot for r in actives])
+        fn = self._decode_fn(b)
         t0 = time.perf_counter()
-        nxt, self.cache, stats = self._decode_fn(b)(
+        nxt, self.cache, stats = fn(
             self.params, jnp.asarray(tokens), jnp.asarray(pos),
-            self.cache, self.routing)
+            jnp.asarray(slot_idx), jnp.asarray(pt), self.cache,
+            self.routing)
         nxt = np.asarray(nxt)
         self.slo.step("decode", time.perf_counter() - t0)
         self.decode_steps += 1
         self._update_loads(stats)
-        for rid in list(self.active):
-            r = self.active[rid]
-            tok = int(nxt[r.slot])
+        for i, r in enumerate(actives):
+            tok = int(nxt[i])
             if not r.generated:
-                self.slo.first_token(rid)
+                self.slo.first_token(r.rid)
             else:
-                self.slo.token(rid)
+                self.slo.token(r.rid)
             r.generated.append(tok)
             r.pos += 1
             if (len(r.generated) >= r.max_new_tokens
                     or r.pos >= self.ecfg.max_len - 1):
                 r.done = True
-                self.slo.finish(rid)
+                self.slo.finish(r.rid)
                 self.free_slots.append(r.slot)
-                self.completed[rid] = r
-                del self.active[rid]
+                if self.kvman is not None:
+                    self.kvman.release(r.slot)
+                self.completed[r.rid] = r
+                del self.active[r.rid]
         if (self.cfg.is_moe and self.ecfg.rebalance_every
                 and self.decode_steps % self.ecfg.rebalance_every == 0):
             self.rebalance()
 
     # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    def step(self):
+        """One engine iteration: admit -> wave prefill -> decode."""
+        self.slo.queue_depth(len(self.queue))
+        wave = self._admit()
+        if wave:
+            self._prefill_wave(wave)
+        self._decode_all()
+
     def run(self, max_iters: int = 10_000):
         """Run until queue + active drain (or max_iters)."""
         it = 0
-        while (self.queue or self.active) and it < max_iters:
-            for req in self._admit():
-                self._prefill(req)
-            self._decode_all()
+        while self.has_work and it < max_iters:
+            self.step()
             it += 1
         return self.slo.summary()
 

@@ -1,0 +1,107 @@
+"""Paged KV-cache manager: fixed-size pages + a free-list allocator.
+
+The dense per-slot cache (``[max_batch, max_len]``) forces
+``max_batch * max_len`` tokens of KV residency whether or not the slots
+are full — the engine's batch size is then bounded by *worst-case*
+sequence length.  Paging (vLLM's PagedAttention scheme) breaks that
+coupling: the device holds one flat pool of ``num_pages`` fixed-size
+pages shared by all sequences, and each sequence owns only the pages its
+tokens actually occupy, tracked in a host-side page table.
+
+The manager here is pure host-side numpy bookkeeping:
+
+  * a LIFO free list of physical page ids (O(1) alloc/free, and recently
+    freed pages are reused first — friendlier to any HBM-side locality),
+  * a ``[max_seqs, max_pages_per_seq]`` int32 page table, ``-1`` = hole.
+    Rows are step inputs to the jitted decode/prefill functions (data,
+    never compile-time constants, so growth never recompiles),
+  * incremental growth: ``ensure(slot, length)`` allocates just the
+    pages needed to cover ``length`` tokens; the engine preempts a
+    victim sequence when the pool runs dry.
+
+Device-side page pools live in the model cache pytree with layout
+``[num_pages, page_size, kv_heads, head_dim]`` per attention layer —
+chosen so that (page, offset) flattens to a single linear token index,
+making every read a 1-gather and every write a 1-scatter
+(see ``models/layers.attention_decode_paged``), and so the Pallas paged
+kernel can map grid block -> physical page via scalar-prefetched tables
+(``kernels/flash_decode.flash_decode_paged``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def pages_for(length: int, page_size: int) -> int:
+    """Pages needed to hold ``length`` tokens."""
+    return -(-int(length) // page_size)
+
+
+@dataclasses.dataclass
+class PagedKVManager:
+    """Free-list page allocator + per-slot page tables (host side)."""
+
+    num_pages: int
+    page_size: int
+    max_pages_per_seq: int
+    max_seqs: int
+
+    def __post_init__(self):
+        assert self.num_pages >= 1 and self.page_size >= 1
+        # a lone sequence must always be able to grow to its max length
+        # (the engine preempts everyone else, but never the grower)
+        assert self.num_pages >= self.max_pages_per_seq, (
+            f"pool of {self.num_pages} pages cannot hold one full "
+            f"sequence of {self.max_pages_per_seq} pages")
+        self._free: list[int] = list(range(self.num_pages - 1, -1, -1))
+        self.page_table = np.full(
+            (self.max_seqs, self.max_pages_per_seq), -1, np.int32)
+        self._owned = np.zeros(self.max_seqs, np.int32)  # pages per slot
+
+    # ------------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def owned(self, slot: int) -> int:
+        return int(self._owned[slot])
+
+    # ------------------------------------------------------------------
+    def ensure(self, slot: int, length: int) -> bool:
+        """Grow slot's table to cover ``length`` tokens.  Returns False
+        (allocating nothing) if the free list can't cover the growth."""
+        want = pages_for(length, self.page_size)
+        if want > self.max_pages_per_seq:
+            raise ValueError(
+                f"sequence of {length} tokens needs {want} pages > "
+                f"max_pages_per_seq={self.max_pages_per_seq}")
+        have = self.owned(slot)
+        need = want - have
+        if need <= 0:
+            return True
+        if need > len(self._free):
+            return False
+        for i in range(have, want):
+            self.page_table[slot, i] = self._free.pop()
+        self._owned[slot] = want
+        return True
+
+    def release(self, slot: int) -> int:
+        """Free every page owned by ``slot``; returns the count freed."""
+        n = self.owned(slot)
+        for i in range(n):
+            self._free.append(int(self.page_table[slot, i]))
+            self.page_table[slot, i] = -1
+        self._owned[slot] = 0
+        return n
+
+    # ------------------------------------------------------------------
+    def rows(self, slots: np.ndarray) -> np.ndarray:
+        """Page-table rows for a batch of slots (copy; safe to mutate)."""
+        return self.page_table[np.asarray(slots, np.int64)].copy()

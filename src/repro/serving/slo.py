@@ -1,4 +1,13 @@
-"""Latency/SLO bookkeeping: TTFT, TPOT, throughput, percentiles."""
+"""Latency/SLO bookkeeping: TTFT, TPOT, throughput, percentiles, and
+engine-health counters (step-function compiles, preemptions, queue
+depth).
+
+The compile counter is the observable for batch bucketing: every time
+the engine builds a step function for a new (kind, signature) pair it
+calls :meth:`compiled`, so ``summary()["total_compiles"]`` counts XLA
+tracings — the quantity power-of-two bucketing + wave prefill bound to
+O(log max_batch + log max_len) regardless of trace length.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -27,10 +36,17 @@ class RequestTiming:
         return (self.finished - self.first_token) / (self.n_generated - 1)
 
 
+def _pct(a: np.ndarray, q: float) -> float:
+    return float(np.percentile(a, q)) if len(a) else 0.0
+
+
 class SLOTracker:
     def __init__(self):
         self.timings: dict[int, RequestTiming] = {}
         self.step_latencies: list[tuple[str, float]] = []
+        self.compile_events: dict[str, list] = defaultdict(list)
+        self.queue_depths: list[int] = []
+        self.preemptions = 0
         self._t0 = time.perf_counter()
 
     def now(self) -> float:
@@ -56,6 +72,24 @@ class SLOTracker:
         self.step_latencies.append((kind, seconds))
 
     # ------------------------------------------------------------------
+    # engine-health counters
+    # ------------------------------------------------------------------
+    def compiled(self, kind: str, key):
+        """Record one step-function compile of the given kind ("decode" /
+        "prefill") and shape signature (e.g. the batch bucket)."""
+        self.compile_events[kind].append(key)
+
+    def compile_count(self, kind: str) -> int:
+        return len(self.compile_events.get(kind, []))
+
+    @property
+    def total_compiles(self) -> int:
+        return sum(len(v) for v in self.compile_events.values())
+
+    def queue_depth(self, depth: int):
+        self.queue_depths.append(depth)
+
+    # ------------------------------------------------------------------
     def summary(self) -> dict:
         done = [t for t in self.timings.values() if t.finished > 0]
         if not done:
@@ -67,16 +101,31 @@ class SLOTracker:
         by_kind = defaultdict(list)
         for k, s in self.step_latencies:
             by_kind[k].append(s)
+        dec = np.asarray(by_kind.get("decode", []))
+        pre = np.asarray(by_kind.get("prefill", []))
+        qd = np.asarray(self.queue_depths)
         return {
             "requests": len(done),
             "ttft_mean": float(ttfts.mean()),
-            "ttft_p99": float(np.percentile(ttfts, 99)),
+            "ttft_p50": _pct(ttfts, 50),
+            "ttft_p90": _pct(ttfts, 90),
+            "ttft_p99": _pct(ttfts, 99),
             "tpot_mean": float(tpots.mean()) if len(tpots) else 0.0,
-            "tpot_p99": (float(np.percentile(tpots, 99))
-                         if len(tpots) else 0.0),
+            "tpot_p50": _pct(tpots, 50),
+            "tpot_p90": _pct(tpots, 90),
+            "tpot_p99": _pct(tpots, 99),
             "total_token_throughput": total_tokens / max(wall, 1e-9),
-            "decode_steps": len(by_kind.get("decode", [])),
-            "prefill_steps": len(by_kind.get("prefill", [])),
-            "decode_step_mean_s": (float(np.mean(by_kind["decode"]))
-                                   if by_kind.get("decode") else 0.0),
+            "decode_steps": len(dec),
+            "prefill_steps": len(pre),
+            "decode_step_mean_s": float(dec.mean()) if len(dec) else 0.0,
+            "decode_step_p50_s": _pct(dec, 50),
+            "decode_step_p99_s": _pct(dec, 99),
+            "prefill_step_p50_s": _pct(pre, 50),
+            "prefill_step_p99_s": _pct(pre, 99),
+            "decode_compiles": self.compile_count("decode"),
+            "prefill_compiles": self.compile_count("prefill"),
+            "total_compiles": self.total_compiles,
+            "preemptions": self.preemptions,
+            "queue_depth_mean": float(qd.mean()) if len(qd) else 0.0,
+            "queue_depth_max": int(qd.max()) if len(qd) else 0,
         }

@@ -1,0 +1,140 @@
+"""Synthetic traffic for the serving engine: Poisson arrivals, mixed
+prompt/output-length distributions, and open/closed-loop replay.
+
+The paper's end-to-end decode-throughput-at-fixed-SLO results (Fig.
+9–12) are measured under sustained multi-tenant load, not one batch of
+hand-fed prompts.  This module provides the load side:
+
+  * :func:`generate_trace` — a deterministic (seeded) request trace:
+    exponential interarrival times at ``arrival_rate`` req/s and
+    clipped-lognormal prompt/output lengths, optionally with a
+    heavy-tail mixture (a fraction of "long" requests drawn at
+    ``tail_scale``× the mean — the bimodality that makes batch
+    composition, and therefore activated-expert counts, fluctuate).
+  * :func:`replay_open_loop` — arrivals happen at trace times on a
+    virtual clock regardless of engine progress (rate-controlled load;
+    queues grow when the engine falls behind — this is the regime where
+    SLO percentiles mean something).  The virtual clock advances by
+    ``step_time`` per engine iteration so CPU-sized runs are
+    deterministic; ``step_time=None`` uses wall time.
+  * :func:`replay_closed_loop` — a fixed number of outstanding clients;
+    each completion immediately submits the next request (throughput-
+    probing load, the classic saturation measurement).
+
+Both replays drive :meth:`ServingEngine.step` directly, so admission,
+wave prefill, bucketing, and paging are exercised exactly as in
+:meth:`ServingEngine.run`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticRequest:
+    arrival: float              # seconds since trace start
+    prompt: np.ndarray          # [n] int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    num_requests: int = 64
+    arrival_rate: float = 50.0      # Poisson rate, requests / second
+    prompt_len_mean: float = 12.0
+    prompt_len_sigma: float = 0.6   # lognormal shape
+    prompt_len_min: int = 2
+    prompt_len_max: int = 48
+    output_len_mean: float = 16.0
+    output_len_sigma: float = 0.5
+    output_len_min: int = 1
+    output_len_max: int = 64
+    tail_fraction: float = 0.0      # share of heavy-tail requests
+    tail_scale: float = 4.0         # their length multiplier
+    vocab_size: int = 256
+    seed: int = 0
+
+
+def _lengths(rng, n, mean, sigma, lo, hi, tail_fraction, tail_scale):
+    mu = np.log(max(mean, 1.0)) - 0.5 * sigma ** 2
+    out = rng.lognormal(mu, sigma, size=n)
+    if tail_fraction > 0:
+        tail = rng.random(n) < tail_fraction
+        out[tail] *= tail_scale
+    return np.clip(np.round(out), lo, hi).astype(np.int64)
+
+
+def generate_trace(tcfg: TrafficConfig) -> list[SyntheticRequest]:
+    rng = np.random.default_rng(tcfg.seed)
+    n = tcfg.num_requests
+    arrivals = np.cumsum(rng.exponential(1.0 / tcfg.arrival_rate, size=n))
+    p_lens = _lengths(rng, n, tcfg.prompt_len_mean, tcfg.prompt_len_sigma,
+                      tcfg.prompt_len_min, tcfg.prompt_len_max,
+                      tcfg.tail_fraction, tcfg.tail_scale)
+    o_lens = _lengths(rng, n, tcfg.output_len_mean, tcfg.output_len_sigma,
+                      tcfg.output_len_min, tcfg.output_len_max,
+                      tcfg.tail_fraction, tcfg.tail_scale)
+    return [
+        SyntheticRequest(
+            arrival=float(arrivals[i]),
+            prompt=rng.integers(0, tcfg.vocab_size, int(p_lens[i]),
+                                dtype=np.int64).astype(np.int32),
+            max_new_tokens=int(o_lens[i]))
+        for i in range(n)
+    ]
+
+
+def replay_open_loop(engine, trace: list[SyntheticRequest], *,
+                     step_time: Optional[float] = 5e-3,
+                     max_iters: int = 100_000) -> dict:
+    """Open-loop (rate-controlled) replay: submit each request at its
+    trace arrival time, stepping the engine in between.  ``step_time``
+    is the virtual seconds one engine iteration represents (None = wall
+    clock).  Returns the engine's SLO summary."""
+    import time as _time
+    i, it = 0, 0
+    t0 = engine.slo.now()
+    while (i < len(trace) or engine.has_work) and it < max_iters:
+        t = it * step_time if step_time is not None \
+            else engine.slo.now() - t0
+        while i < len(trace) and trace[i].arrival <= t:
+            engine.submit(trace[i].prompt, trace[i].max_new_tokens)
+            i += 1
+        if engine.has_work:
+            engine.step()
+            it += 1
+        elif i < len(trace):
+            # idle gap before the next arrival
+            if step_time is not None:
+                # jump the virtual clock (one iteration consumed)
+                it = max(it + 1,
+                         int(np.ceil(trace[i].arrival / step_time)))
+            else:
+                # wall clock: sleep instead of busy-spinning the
+                # iteration budget away
+                _time.sleep(min(max(trace[i].arrival - t, 0.0), 0.05))
+    return engine.slo.summary()
+
+
+def replay_closed_loop(engine, trace: list[SyntheticRequest], *,
+                       concurrency: int = 8,
+                       max_iters: int = 100_000) -> dict:
+    """Closed-loop replay: keep ``concurrency`` requests outstanding
+    (arrival times in the trace are ignored)."""
+    i, it = 0, 0
+    outstanding = 0
+    done_before = 0
+    while (i < len(trace) or engine.has_work) and it < max_iters:
+        while i < len(trace) and outstanding < concurrency:
+            engine.submit(trace[i].prompt, trace[i].max_new_tokens)
+            outstanding += 1
+            i += 1
+        engine.step()
+        finished = len(engine.completed)
+        outstanding -= finished - done_before
+        done_before = finished
+        it += 1
+    return engine.slo.summary()

@@ -1,0 +1,21 @@
+"""Shared pytest configuration: marker registration + src-layout path.
+
+Markers:
+  fast — cheap unit tests (default CI gate runs ``-m "not slow"``).
+  slow — engine/benchmark integration tests that jit full model steps.
+"""
+import os
+import sys
+
+# make `import repro` work without PYTHONPATH=src or an editable install
+_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "fast: cheap unit tests (run in the default CI gate)")
+    config.addinivalue_line(
+        "markers",
+        "slow: engine integration tests that jit full model step functions")

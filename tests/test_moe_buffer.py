@@ -3,6 +3,9 @@ of the EP datapath) and the grouped-matmul implementations."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.moe import build_pair_buffer, grouped_matmul

@@ -1,0 +1,86 @@
+"""Deterministic invariants of the token-routing algorithms (no
+hypothesis dependency — these lock down the paper's core claims even on
+minimal installs).
+
+  * Lemma 1: METRO activates exactly ONE replica per hot expert — every
+    (token, k) pair of an expert lands on the same physical slot.
+  * Dominance: METRO's per-device activated-expert max is <= EPLB
+    round-robin's on the same placement (METRO optimizes exactly this
+    objective; round-robin activates every replica of a hot expert).
+  * EPLB balance: round-robin spreads an expert's tokens across its
+    replicas within +-1 token.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (build_placement, route_eplb, route_metro,
+                        metro_token_slots, topk_histogram)
+from repro.core.metrics import activated_per_device
+
+pytestmark = pytest.mark.fast
+
+
+def _case(seed, n=16, g=4, spd=6, tokens=64, k=2, skew=1.5):
+    rng = np.random.default_rng(seed)
+    loads = rng.random(n) ** skew + 0.05
+    placement = build_placement(n, g, spd, loads=loads)
+    probs = loads / loads.sum()
+    ids = np.stack([
+        rng.choice(n, size=tokens, p=probs, replace=True)
+        for _ in range(k)], axis=1).astype(np.int32)
+    return placement, jnp.asarray(ids)
+
+
+@pytest.mark.parametrize("seed", range(6))
+class TestMetroLemma1:
+    def test_single_replica_per_hot_expert(self, seed):
+        p, ids = _case(seed)
+        hist = topk_histogram(ids, p.num_experts)
+        expert_slot = route_metro(
+            hist, jnp.asarray(p.expert_slots),
+            num_devices=p.num_devices, slots_per_device=p.slots_per_device)
+        slots = np.asarray(metro_token_slots(ids, expert_slot))
+        hist = np.asarray(hist)
+        es = np.asarray(expert_slot)
+        for e in range(p.num_experts):
+            used = np.unique(slots[np.asarray(ids) == e])
+            if hist[e] > 0:
+                # all of expert e's pairs share its one activated replica
+                assert len(used) == 1 and used[0] == es[e]
+                assert es[e] in p.expert_slots[e]
+            else:
+                assert es[e] == -1 and len(used) == 0
+
+    def test_metro_dominates_eplb_activation(self, seed):
+        """Paper Fig. 4/8: max activated replicas per device under METRO
+        is never worse than under token-balanced round-robin."""
+        p, ids = _case(seed)
+        hist = topk_histogram(ids, p.num_experts)
+        es = route_metro(
+            hist, jnp.asarray(p.expert_slots),
+            num_devices=p.num_devices, slots_per_device=p.slots_per_device)
+        metro_slots = metro_token_slots(ids, es)
+        eplb_slots = route_eplb(ids, jnp.asarray(p.expert_slots),
+                                jnp.asarray(p.expert_num_replicas))
+        act_m = np.asarray(activated_per_device(
+            metro_slots, p.num_devices, p.slots_per_device))
+        act_e = np.asarray(activated_per_device(
+            eplb_slots, p.num_devices, p.slots_per_device))
+        assert act_m.max() <= act_e.max()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_eplb_round_robin_within_one(seed):
+    p, ids = _case(seed)
+    slots = np.asarray(route_eplb(ids, jnp.asarray(p.expert_slots),
+                                  jnp.asarray(p.expert_num_replicas)))
+    ids_np = np.asarray(ids)
+    for e in range(p.num_experts):
+        mine = slots[ids_np == e]
+        if len(mine) == 0:
+            continue
+        replicas = p.expert_slots[e][p.expert_slots[e] >= 0]
+        counts = np.array([(mine == s).sum() for s in replicas])
+        assert counts.sum() == len(mine)          # no foreign slots
+        assert counts.max() - counts.min() <= 1   # +-1 balance

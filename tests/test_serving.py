@@ -11,6 +11,8 @@ from repro.models import init_lm
 from repro.serving import EngineConfig, ServingEngine
 from repro.sharding.policy import make_dist
 
+pytestmark = pytest.mark.slow
+
 
 def _engine(name="mixtral-8x22b", **kw):
     cfg = get_config(name).reduced()
