@@ -16,6 +16,14 @@ compile counts are exact even though wall-clock is not a TPU claim):
      quantities, measured through the real engine instead of the
      simulator).
 
+  3. *Mixed prefill+decode steps* — a long prompt arrives while short
+     requests are mid-decode; wave-monolith vs chunked vs fused mixed
+     steps.  Chunking must bound the worst prefill-carrying call (and
+     therefore the decode TPOT spike) by O(prefill_chunk) instead of
+     O(max_len), and mixed steps must eliminate decode stalls entirely;
+     also reports the O(max_len) -> O(chunk) prefill activation-memory
+     bound.
+
 Run:  PYTHONPATH=src python benchmarks/bench_engine_scale.py [--fast]
 or via the suite driver: python benchmarks/run.py --only engine
 """
@@ -67,8 +75,11 @@ def compile_comparison(n_requests=16, fast=False):
     variants = {
         "seed_fixed": dict(bucket_mode="fixed", kv_layout="dense",
                            batch_prefill=False),
+        # wave mode pinned: the monolithic wave path is the program the
+        # seed scheduler also runs, so token agreement is comparable;
+        # chunked/mixed prefill gets its own experiment below.
         "bucketed_paged": dict(bucket_mode="pow2", kv_layout="paged",
-                               batch_prefill=True),
+                               batch_prefill=True, prefill_mode="wave"),
     }
     results, tokens, rows = {}, {}, []
     for name, kw in variants.items():
@@ -146,9 +157,131 @@ def load_comparison(n_requests=24, fast=False):
     return rows
 
 
+# ----------------------------------------------------------------------
+# experiment 3: decode TPOT under a long-prompt prefill — wave monolith
+# vs chunked prefill vs fused mixed steps (sarathi piggybacking)
+# ----------------------------------------------------------------------
+
+
+def _wave_scratch_bytes(cfg, b, l):
+    """Bytes of bf16 K/V scratch a wave-prefill call holds for ALL
+    attention layers simultaneously (the init_wave_cache pytree)."""
+    from repro.models.layers import attn_dims
+    kinds = cfg.layer_kinds()
+    n_blocks = cfg.num_layers // len(kinds)
+    dims = attn_dims(cfg)
+    n_attn = sum(1 for m, _ in kinds if m.startswith("attn"))
+    return n_attn * n_blocks * b * dims.kv * l * dims.head_dim * 2 * 2
+
+
+def mixed_prefill_comparison(fast=False):
+    """A long prompt arrives while short requests are mid-decode.
+
+    wave    — the whole prompt prefills in one monolithic call; every
+              decode row stalls behind it (TPOT spike ~ O(max_len)).
+    chunked — prefill advances one prefill_chunk per iteration; decode
+              runs between chunks (stall bounded by one chunk).
+    mixed   — the chunk and the decode tokens share ONE fused call; no
+              stall is ever recorded.
+
+    Also reports the prefill activation-memory bound: the wave scratch
+    is O(max_len) across all layers at once, the chunk path touches
+    O(prefill_chunk) per call.
+    """
+    max_len, chunk = 256, 32
+    n_short, gen = (3, 16) if fast else (4, 40)
+    long_len = 120 if fast else 200
+    variants = {
+        "wave": dict(prefill_mode="wave"),
+        "chunked": dict(prefill_mode="chunked", mixed_steps=False),
+        "mixed": dict(prefill_mode="chunked", mixed_steps=True),
+    }
+    rows, worst, met = [], {}, {}
+    for name, kw in variants.items():
+        cfg, eng = build_engine(max_batch=8, max_len=max_len,
+                                rebalance_every=0, prefill_chunk=chunk,
+                                page_size=16, bucket_compile_grace=0,
+                                **kw)
+        rng = np.random.default_rng(5)
+
+        def phase():
+            for _ in range(n_short):
+                eng.submit(rng.integers(0, cfg.vocab_size, 12), gen)
+            for _ in range(6):              # shorts are live decoders
+                eng.step()
+            eng.submit(rng.integers(0, cfg.vocab_size, long_len), 8)
+            first = eng._next_rid - n_short - 1
+            eng.run()
+            return list(range(first, eng._next_rid))
+
+        phase()                             # warmup: compiles every
+        m_steps = len(eng.slo.step_latencies)      # signature this shape
+        m_stalls = len(eng.slo.stalls)             # profile will touch
+        rids = phase()                      # measured (steady-state)
+        steps = eng.slo.step_latencies[m_steps:]
+        stalls = [s for _, s in eng.slo.stalls[m_stalls:]]
+        tpots = np.asarray([eng.slo.timings[r].tpot for r in rids
+                            if eng.slo.timings[r].n_generated > 1])
+        prefill_calls = [sec for k, sec in steps
+                         if k in ("prefill", "chunk", "mixed")]
+        worst[name] = max(prefill_calls, default=0.0)
+        met[name] = {"stall_max": max(stalls, default=0.0),
+                     "stall_p50": float(np.median(stalls)) if stalls
+                     else 0.0,
+                     "stall_events": len(stalls)}
+        rows.append((
+            f"engine_scale_mixed_{name}",
+            float(np.percentile(tpots, 99)) * 1e6,
+            f"requests={len(rids)};"
+            f"tpot_p50={np.percentile(tpots, 50) * 1e3:.1f}ms;"
+            f"tpot_p99={np.percentile(tpots, 99) * 1e3:.1f}ms;"
+            f"stall_events={len(stalls)};"
+            f"stall_total={sum(stalls) * 1e3:.0f}ms;"
+            f"stall_max={max(stalls, default=0) * 1e3:.0f}ms;"
+            f"worst_prefill_call={worst[name] * 1e3:.0f}ms;"
+            f"prefill_calls={len(prefill_calls)}"))
+    # cfg from the variants loop (same arch for every variant).
+    # wave_scratch: the PERSISTENT all-layer init_wave_cache pytree a
+    # monolithic prefill call holds for its whole duration (O(max_len)
+    # per layer, all layers at once) — chunked prefill eliminates it
+    # entirely and keeps only O(chunk) K/V per call.  Honesty note: the
+    # jnp reference chunk path still materializes a TRANSIENT
+    # O(max_len) gathered page view per attention layer while that
+    # layer runs; the true end-to-end O(chunk) footprint is what the
+    # flash_prefill_paged Pallas kernel delivers by streaming pages
+    # (wiring it into the engine is a ROADMAP item).
+    wave_b = _wave_scratch_bytes(cfg, 1, 256)
+    chunk_b = _wave_scratch_bytes(cfg, 1, chunk)
+    rows.append((
+        "engine_scale_mixed_memory", 0.0,
+        f"wave_persistent_scratch_bytes={wave_b};"
+        f"chunk_kv_bytes_per_call={chunk_b};"
+        f"persistent_bound_ratio={wave_b / max(chunk_b, 1):.1f}x;"
+        f"note=jnp_ref_chunk_path_still_gathers_O(max_len)_transient_"
+        f"per_layer,kernel_path_streams_O(chunk)"))
+    # the gating claim is the deterministic stall STRUCTURE (wall-clock
+    # on tiny CPU models is dispatch-overhead noise; the timing columns
+    # above are the observables): the wave monolith stalls decode ONCE
+    # for the whole prompt, chunking splits that into several
+    # chunk-bounded stalls, and fused mixed steps stall decode never
+    bounded = (met["wave"]["stall_events"] == 1
+               and met["chunked"]["stall_events"] > 1
+               and met["mixed"]["stall_events"] == 0)
+    rows.append(("engine_scale_mixed_check", 0.0,
+                 f"chunk_stall_bounded={bounded};"
+                 f"wave_stall_max={met['wave']['stall_max'] * 1e3:.0f}ms;"
+                 f"chunk_stall_p50="
+                 f"{met['chunked']['stall_p50'] * 1e3:.0f}ms;"
+                 f"chunk_stall_max="
+                 f"{met['chunked']['stall_max'] * 1e3:.0f}ms;"
+                 f"mixed_stall_events={met['mixed']['stall_events']}"))
+    return rows, bounded
+
+
 def run(fast: bool = False):
     rows, _, _ = compile_comparison(fast=fast)
     rows += load_comparison(fast=fast)
+    rows += mixed_prefill_comparison(fast=fast)[0]
     return rows
 
 
@@ -158,13 +291,18 @@ def main():
     args = ap.parse_args()
     rows, complete, fewer = compile_comparison(fast=args.fast)
     rows += load_comparison(fast=args.fast)
+    mixed_rows, bounded = mixed_prefill_comparison(fast=args.fast)
+    rows += mixed_rows
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     assert complete, "bucketed engine dropped requests"
     assert fewer, "bucketed engine did not reduce compiles"
+    assert bounded, ("chunked prefill did not bound decode stalls below "
+                     "the wave monolith / mixed steps still stalled")
     print("# OK: all requests served, bucketed engine compiles fewer "
-          "step functions")
+          "step functions, chunked+mixed prefill bounds decode stalls "
+          "by one chunk")
 
 
 if __name__ == "__main__":

@@ -53,8 +53,10 @@ def main():
               f"TPOT p50 {s['tpot_p50']*1e3:.1f}ms p99 "
               f"{s['tpot_p99']*1e3:.1f}ms | "
               f"throughput {s['total_token_throughput']:.1f} tok/s | "
-              f"{s['decode_steps']} decode / {s['prefill_steps']} "
-              f"prefill steps | {s['total_compiles']} compiles "
+              f"{s['decode_steps']} decode / {s['chunk_steps']} chunk "
+              f"/ {s['mixed_steps']} mixed / {s['prefill_steps']} wave "
+              f"steps | stalls {s['decode_stall_events']} | "
+              f"{s['total_compiles']} compiles "
               f"({s['decode_compiles']} decode)")
     print("\n(identical generated tokens across algos — routing only "
           "moves compute; on TPU the decode-phase gain comes from fewer "

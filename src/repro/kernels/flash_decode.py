@@ -155,6 +155,117 @@ def _paged_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_prefill_kernel(start_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *, page_size: int,
+                          n_pages: int, group: int, scale: float,
+                          window: int):
+    b = pl.program_id(0)
+    pb = pl.program_id(2)
+
+    @pl.when(pb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # [C*G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)              # [ps, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    cg = q.shape[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    offs = pb * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)                   # [1, ps]
+    # chunk-offset query window: row r of the q block is query
+    # position start[b] + r // group
+    qpos = start_ref[b] + jax.lax.broadcasted_iota(
+        jnp.int32, (cg, 1), 0) // group                 # [C*G, 1]
+    valid = (offs <= qpos) & (pt_ref[b, pb] >= 0)
+    if window > 0:
+        valid &= offs > qpos - window
+    s = jnp.where(valid, s, _NEG)                       # [C*G, ps]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(pb == n_pages - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def flash_prefill_paged(q, k_pool, v_pool, start, page_table, *,
+                        window: int = 0, interpret: bool = True):
+    """Chunked-prefill flash attention over the paged KV pool.
+
+    The multi-token sibling of :func:`flash_decode_paged`: one prefill
+    *chunk* of C queries per sequence attends to everything already
+    written to its pages (earlier chunks + this one — the engine
+    scatters the chunk's K/V into the pool before calling), with a
+    chunk-offset query window: the query at chunk row c sits at absolute
+    position ``start[b] + c`` and masks positions beyond it (and, when
+    ``window`` > 0, positions at or below ``start[b] + c - window`` —
+    SWA layers store the full sequence in pages and mask at read time).
+
+    q: [B, KV, C, G, hd]; k/v_pool: [num_pages, page_size, KV, hd] (bf16
+    or fp8); start: [B] int32; page_table: [B, Pmax] int32 (-1 = hole).
+    Returns [B, KV, C, G, hd] in q.dtype.
+
+    Grid (batch, kv_head, logical_page): the page dimension is innermost
+    and sequential, carrying the online-softmax state for all C*G query
+    rows of the chunk in VMEM scratch; the K/V index map reads the
+    prefetched page table, so address translation happens at DMA-issue
+    time on the scalar core and activation memory is O(C), not
+    O(max_len).
+    """
+    b, kv, c, g, hd = q.shape
+    num_pages, ps, kv_p, _ = k_pool.shape
+    assert kv_p == kv, (kv_p, kv)
+    pmax = page_table.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(
+        _paged_prefill_kernel, page_size=ps, n_pages=pmax, group=g,
+        scale=scale, window=int(window or 0))
+    qf = q.reshape(b, kv, c * g, hd)
+
+    def kv_map(i, j, pb, start, pt):
+        return (jnp.maximum(pt[i, pb], 0), 0, j, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, kv, pmax),
+            in_specs=[
+                pl.BlockSpec((1, 1, c * g, hd),
+                             lambda i, j, pb, start, pt: (i, j, 0, 0)),
+                pl.BlockSpec((1, ps, 1, hd), kv_map),
+                pl.BlockSpec((1, ps, 1, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, c * g, hd),
+                                   lambda i, j, pb, start, pt: (i, j, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((c * g, 1), jnp.float32),
+                pltpu.VMEM((c * g, 1), jnp.float32),
+                pltpu.VMEM((c * g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, c * g, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(start.astype(jnp.int32), page_table.astype(jnp.int32),
+      qf, k_pool, v_pool)
+    return out.reshape(b, kv, c, g, hd)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def flash_decode_paged(q, k_pool, v_pool, pos, page_table, *,
                        interpret: bool = True):

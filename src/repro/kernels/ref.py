@@ -56,6 +56,52 @@ def grouped_matmul_ref(x: np.ndarray, w: np.ndarray,
     return out
 
 
+def flash_prefill_paged_ref(q: np.ndarray, k_pool: np.ndarray,
+                            v_pool: np.ndarray, start: np.ndarray,
+                            page_table: np.ndarray,
+                            window: int = 0) -> np.ndarray:
+    """Oracle for the chunked-prefill paged-attention kernel.
+
+    q: [B, KV, C, G, hd]; k/v_pool: [P, ps, KV, hd]; start: [B] absolute
+    position of each row's first chunk query; page_table: [B, Pmax]
+    (-1 = hole).  Query c attends positions (start+c-window, start+c]
+    (all of [0, start+c] when window == 0) restricted to mapped pages.
+    """
+    b, kv, c, g, hd = q.shape
+    _, ps, _, _ = k_pool.shape
+    pmax = page_table.shape[1]
+    s_len = pmax * ps
+    qf = np.asarray(q, np.float32)
+    out = np.zeros_like(qf)
+    scale = 1.0 / np.sqrt(hd)
+    spos = np.arange(s_len)
+    for i in range(b):
+        # gather this sequence's pages into a dense [S, KV, hd] view
+        kd = np.zeros((s_len, kv, hd), np.float32)
+        vd = np.zeros((s_len, kv, hd), np.float32)
+        mapped = np.zeros(s_len, bool)
+        for p in range(pmax):
+            pg = int(page_table[i, p])
+            if pg < 0:
+                continue
+            kd[p * ps:(p + 1) * ps] = k_pool[pg]
+            vd[p * ps:(p + 1) * ps] = v_pool[pg]
+            mapped[p * ps:(p + 1) * ps] = True
+        for ci in range(c):
+            qpos = int(start[i]) + ci
+            mask = mapped & (spos <= qpos)
+            if window:
+                mask &= spos > qpos - window
+            for j in range(kv):
+                logits = qf[i, j, ci] @ kd[:, j].T * scale    # [G, S]
+                logits = np.where(mask[None, :], logits, -1e30)
+                logits -= logits.max(axis=-1, keepdims=True)
+                p_ = np.exp(logits)
+                p_ /= p_.sum(axis=-1, keepdims=True)
+                out[i, j, ci] = p_ @ vd[:, j]
+    return out
+
+
 def flash_decode_ref(q: np.ndarray, k_cache: np.ndarray,
                      v_cache: np.ndarray, pos: np.ndarray) -> np.ndarray:
     """Oracle for the decode-attention kernel.

@@ -363,6 +363,88 @@ def init_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def attention_prefill_paged(cfg: ModelConfig, params, x, cache, page_table,
+                            start, n_tok, *, window: Optional[int] = None,
+                            dims=None, rope: bool = True, dist=None):
+    """One resumable prefill chunk against the *paged* KV pool.
+
+    x: [B, C, d] chunk activations; cache k/v: [P, ps, KV, hd] (shared
+    pools); page_table: [B, Pmax]; start: [B] absolute position of each
+    row's first chunk token; n_tok: [B] valid tokens this chunk (<= C).
+    Tokens past a row's n_tok are padding: their K/V writes are dropped
+    and their outputs are garbage the caller must mask.
+
+    The chunk's K/V are scattered through the page table first, then
+    every query attends over the full gathered page view with the causal
+    mask ``spos <= start + i`` (+ window for SWA).  Because the gathered
+    view always has the same Pmax*ps length and later positions are
+    masked to exact zeros, the outputs — and the written pages — are
+    bitwise invariant to how a prompt is split into chunks; a single
+    call covering the whole prompt is the reference semantics the
+    chunked-prefill equivalence suite pins down.
+
+    Memory note: this reference path materializes the gathered
+    [B, Pmax*ps, KV, hd] view (an O(max_len) TRANSIENT, one layer at a
+    time) — what chunking eliminates is the wave path's PERSISTENT
+    all-layer O(max_len) scratch pytree.  The Pallas twin
+    (``kernels/flash_decode.flash_prefill_paged``) streams pages
+    page-by-page for a true O(chunk) footprint.
+
+    Returns (out [B, C, d], new_cache).
+    """
+    b, c, d = x.shape
+    dims = dims or attn_dims(cfg)
+    num_pages, ps, kvh, hd = cache["k"].shape
+    pmax = page_table.shape[1]
+    offs = jnp.arange(c)
+    positions = start[:, None] + offs[None, :]                 # [B, C]
+    q, k, v = _project_qkv(cfg, params, x, positions, dims, rope=rope)
+    # q: [B, KV, G, C, hd]; k/v: [B, KV, 1, C, hd]
+
+    # scatter this chunk's K/V through the page table (flat token view;
+    # padding tokens and unmapped pages -> OOB index -> dropped)
+    k_tok = k[:, :, 0].transpose(0, 2, 1, 3)                   # [B, C, KV, hd]
+    v_tok = v[:, :, 0].transpose(0, 2, 1, 3)
+    lp = jnp.minimum(positions // ps, pmax - 1)
+    phys = jnp.take_along_axis(page_table, lp, axis=1)         # [B, C]
+    valid_w = (offs[None, :] < n_tok[:, None]) & (phys >= 0)
+    flat_idx = jnp.where(valid_w, phys * ps + positions % ps,
+                         num_pages * ps)
+    kf = cache["k"].reshape(num_pages * ps, kvh, hd)
+    vf = cache["v"].reshape(num_pages * ps, kvh, hd)
+    kf = kf.at[flat_idx.reshape(-1)].set(
+        k_tok.reshape(-1, kvh, hd).astype(kf.dtype), mode="drop")
+    vf = vf.at[flat_idx.reshape(-1)].set(
+        v_tok.reshape(-1, kvh, hd).astype(vf.dtype), mode="drop")
+    new_cache = {"k": kf.reshape(num_pages, ps, kvh, hd),
+                 "v": vf.reshape(num_pages, ps, kvh, hd)}
+
+    # gather this batch's pages and attend with a chunk-offset query
+    # window (the Pallas twin is kernels/flash_decode.flash_prefill_paged)
+    pt_safe = jnp.maximum(page_table, 0)
+    kg = new_cache["k"][pt_safe].reshape(b, pmax * ps, kvh, hd)
+    vg = new_cache["v"][pt_safe].reshape(b, pmax * ps, kvh, hd)
+    kg = kg.transpose(0, 2, 1, 3)
+    vg = vg.transpose(0, 2, 1, 3)
+    if kg.dtype.itemsize == 1:          # fp8 pool: dequantize for dots
+        kg = kg.astype(jnp.bfloat16)
+        vg = vg.astype(jnp.bfloat16)
+
+    scale = 1.0 / np.sqrt(dims.head_dim)
+    logits = jnp.einsum("bkgqh,bksh->bkgqs", q, kg,
+                        preferred_element_type=jnp.float32) * scale
+    spos = jnp.arange(pmax * ps)
+    valid = (spos[None, None, :] <= positions[:, :, None]) & \
+        jnp.repeat(page_table >= 0, ps, axis=1)[:, None, :]
+    if window:
+        valid &= spos[None, None, :] > positions[:, :, None] - window
+    logits = jnp.where(valid[:, None, None, :, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1).astype(vg.dtype)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, vg)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, c, dims.heads * dims.head_dim)
+    return o @ params["wo"], new_cache
+
+
 def attention_decode_paged(cfg: ModelConfig, params, x, cache, page_table,
                            pos, *, window: Optional[int] = None, dims=None,
                            rope: bool = True, dist=None):

@@ -157,7 +157,15 @@ def init_wave_cache(cfg: ModelConfig, dist: Dist, batch: int, length: int,
                     dtype=jnp.bfloat16):
     """Scratch cache for one batched prefill wave: attention buffers are
     FULL length (never rolling) so every position lands at its own index
-    and can be scattered into the serving cache afterwards."""
+    and can be scattered into the serving cache afterwards.
+
+    Legacy path: only ``prefill_mode="wave"`` (and the dense KV layout)
+    still allocates this persistent O(batch * length * n_layers)
+    scratch — the engine's default chunked prefill
+    (``mode="chunk_prefill"``) writes each O(prefill_chunk) chunk
+    straight into the paged serving cache and allocates no full-length
+    wave scratch at all (see attention_prefill_paged's memory note for
+    the reference path's per-layer transient)."""
     kinds = cfg.layer_kinds()
     n_blocks = cfg.num_layers // len(kinds)
     cache = {}
@@ -304,6 +312,31 @@ def _mixer_apply(cfg, dist, lp, mixer, x, *, mode, lc, pos, chunk,
     ``page_table`` switches attention layers to the paged KV pool.
     """
     window = cfg.sliding_window if mixer == "attn_swa" else None
+    if mode == "chunk_prefill":
+        # resumable chunked prefill: a [B, C] chunk runs against the
+        # SERVING cache (paged pools / per-slot mamba state) instead of a
+        # full-length wave scratch buffer.  ``pos`` is each row's chunk
+        # start; row_valid's per-row prefix length is the chunk's n_tok.
+        n_tok = (jnp.sum(row_valid.astype(jnp.int32), axis=1)
+                 if row_valid is not None
+                 else jnp.full((x.shape[0],), x.shape[1], jnp.int32))
+        if mixer == "mamba":
+            if slot_idx is None:
+                return M.mamba_chunk(cfg, lp["mamba"], x, lc, n_tok,
+                                     dist=dist)
+            rows = jax.tree.map(
+                lambda a: a[jnp.minimum(slot_idx, a.shape[0] - 1)], lc)
+            y, nc = M.mamba_chunk(cfg, lp["mamba"], x, rows, n_tok,
+                                  dist=dist)
+            nc = jax.tree.map(
+                lambda full, part: full.at[slot_idx].set(
+                    part.astype(full.dtype), mode="drop"), lc, nc)
+            return y, nc
+        assert page_table is not None, \
+            "chunked prefill requires the paged KV layout"
+        return L.attention_prefill_paged(
+            cfg, lp["attn"], x, lc, page_table, pos, n_tok,
+            window=window, dims=L.attn_dims(cfg, dist.ep_size), dist=dist)
     if mixer == "mamba":
         if mode == "decode":
             if slot_idx is None:
@@ -392,6 +425,16 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
     ``row_valid`` (bool, [B] decode / [B, S] prefill) keeps padding
     tokens out of MoE routing, making routing decisions — and therefore
     the numerics — invariant to batch-bucket and length padding.
+
+    ``mode="chunk_prefill"``: resumable chunked prefill.  ``tokens`` is
+    a [B, C] chunk, ``pos`` [B] the absolute position of each row's
+    first chunk token, ``cache`` the SERVING cache (paged pools +
+    per-slot mamba state — no wave scratch buffer), ``row_valid``
+    [B, C] a per-row contiguous prefix mask (its row-sum is the chunk's
+    valid-token count).  Attention reads already-written pages, mamba
+    carries {conv, h} across calls, so any chunk split of a prompt is
+    bitwise identical to one monolithic chunk_prefill call — the
+    invariant tests/test_chunked_prefill.py locks down.
     """
     if cfg.family == "encdec":
         from repro.models import encdec

@@ -153,6 +153,68 @@ def mamba_train(cfg: ModelConfig, params, x, *, chunk: int = 128,
     return out, {}
 
 
+def mamba_chunk(cfg: ModelConfig, params, x, cache, n_tok, *, dist=None):
+    """Resumable prefill-chunk step: run ``n_tok`` tokens per row against
+    the decode cache and hand the advanced cache back.
+
+    x: [B, C, d]; cache: {"conv": [B, K-1, di] raw pre-conv inputs,
+    "h": [B, di, N] f32}; n_tok: [B] valid tokens this chunk (<= C,
+    positions beyond a row's n_tok are padding and leave its state
+    untouched).  Returns ([B, C, d], new_cache).
+
+    Unlike :func:`mamba_train` (chunked *associative* scan, whose
+    combine tree depends on the chunk size), the recurrence here is a
+    strictly sequential per-token scan — the same arithmetic in the same
+    order for every token no matter how the prompt is split — so chunked
+    prefill is bitwise identical to a single monolithic chunk call, and
+    the handed-off state is exactly what step-by-step decode would have
+    produced."""
+    b, c, d = x.shape
+    k = cfg.ssm_conv
+    xz = x @ params["w_in"].astype(x.dtype)
+    xm_raw, z = jnp.split(xz, 2, axis=-1)
+    if dist is not None:
+        xm_raw = dist.shard(xm_raw, dist.dp_axes, None, dist.tp_axis)
+        z = dist.shard(z, dist.dp_axes, None, dist.tp_axis)
+    # conv over (cached K-1 raw inputs ++ this chunk); slicing off the
+    # history rows reproduces _causal_conv's zero-padding bit-for-bit
+    # when the cache is all-zeros (a fresh sequence).
+    hist = jnp.concatenate(
+        [cache["conv"].astype(xm_raw.dtype), xm_raw], axis=1)
+    xm = jax.nn.silu(_causal_conv(
+        hist, params["conv_w"].astype(x.dtype),
+        params["conv_b"].astype(x.dtype))[:, k - 1:])
+    dt, bt, ct = _ssm_params(cfg, params, xm)
+    # padding tokens become exact no-ops: dt=0 -> decay=exp(0)=1, inp=0
+    valid = jnp.arange(c)[None, :] < n_tok[:, None]
+    dt = jnp.where(valid[..., None], dt, 0.0)
+    a = -jnp.exp(params["A_log"])                     # [di, N]
+    xf = xm.astype(jnp.float32)
+    decay = jnp.exp(dt[..., None] * a)                # [B, C, di, N]
+    inp = (dt * xf)[..., None] * bt[:, :, None, :]    # [B, C, di, N]
+
+    def body(h, t):
+        dec_t, inp_t, c_t = t
+        h = h * dec_t + inp_t
+        return h, jnp.einsum("bin,bn->bi", h, c_t)
+
+    h_last, ys = jax.lax.scan(
+        body, cache["h"],
+        (decay.transpose(1, 0, 2, 3), inp.transpose(1, 0, 2, 3),
+         ct.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + xf * params["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["w_out"].astype(x.dtype)
+    if dist is not None:
+        out = dist.shard(out, dist.dp_axes, None, None)
+    # conv handoff: the K-1 raw inputs before each row's position n_tok
+    # (in the concat frame that is exactly indices n_tok .. n_tok+K-2)
+    idx = n_tok[:, None] + jnp.arange(k - 1)[None, :]
+    new_conv = jnp.take_along_axis(hist, idx[:, :, None], axis=1)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "h": h_last}
+
+
 def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
     di = cfg.ssm_expand * cfg.d_model
     return {

@@ -5,34 +5,53 @@ EPLB expert placement/replication as the fixed substrate, token routing
 selectable per phase — METRO for the memory-bound decode phase, EPLB's
 round-robin for prefill (exactly the paper's deployment).
 
-Engine loop per iteration (vLLM-style):
-  1. admit waiting requests into free slots (and, for the paged KV
-     layout, reserve their prompt pages from the shared pool),
-  2. run ONE batched chunked prefill over the admitted wave — prompts
-     are packed into a single padded ``[B, L]`` call so METRO/EPLB
-     routing sees realistic mixed-length batches,
-  3. run one decode step for the active set, gathered into the smallest
-     power-of-two batch bucket (``bucket_mode="pow2"``) instead of
-     always padding to ``max_batch``,
+Engine loop per iteration (vLLM/sarathi-style):
+  1. admit waiting requests into free slots.  With chunked prefill a
+     request only needs pages for its FIRST chunk to start, so admission
+     scans past a page-blocked head request instead of head-of-line
+     blocking the whole queue (``prefill_mode="wave"`` keeps the strict
+     FCFS gate for A/B).
+  2. plan this iteration's prefill work: every prefilling row advances
+     by up to ``prefill_chunk`` tokens, capped globally by
+     ``mixed_prefill_budget`` tokens per iteration (sarathi's token
+     budget).  Chunks run against the PAGED serving cache directly —
+     attention reads already-written pages, mamba carries {conv, h}
+     state across calls — so a long prompt costs O(chunk) activations
+     instead of O(max_len) and can be preempted between chunks.
+  3. run the step: when ``mixed_steps`` and both phases have rows, ONE
+     fused call executes the prefill chunks and the decode tokens
+     together (decode no longer stalls behind prefill at all); otherwise
+     the chunk call and the bucketed decode call run back-to-back and
+     the chunk time is attributed as decode stall (``SLOTracker.stall``).
   4. retire finished requests; every ``rebalance_every`` decode steps,
      recompute EPLB placement from the observed expert-load EWMA and
      reshuffle the physical expert weights.
 
+Every equivalence is pinned bit-for-bit by the test harness:
+  * any chunk split == one monolithic chunk call (logits + KV pages),
+    tests/test_chunked_prefill.py;
+  * mixed fused step == pure-phase chunk-then-decode sequence
+    (tokens + per-call expert_hist), tests/test_mixed_steps.py;
+  * preempt-between-chunks + readmission == never-preempted run,
+    tests/test_mixed_steps.py.
+
 Batch-size bucketing mirrors the paper's CUDA-graph integration (§V):
 step functions are jitted once per (bucket, padded-length) signature and
 reused for every batch that rounds up to it; the ``SLOTracker`` counts
-each fresh compile, so compile traffic is O(log max_batch · log max_len)
-on any trace.
+each fresh compile.  Chunk calls have ONE static token length
+(``prefill_chunk``; short tails are masked per row), so chunked prefill
+needs O(log max_batch) compiles total vs O(log max_batch · log max_len)
+for wave prefill.
 
 KV storage is paged by default (``kv_layout="paged"``): attention layers
 share a flat pool of fixed-size pages (``serving/kv.py``), each sequence
 owns only the pages its tokens occupy, and page tables are step *inputs*
 — growing a sequence or admitting past the dense-residency limit never
 recompiles.  When the pool runs dry the engine preempts the youngest
-sequence (free its pages, requeue, recompute on readmission), so
-``max_batch`` can exceed the worst-case-resident limit
-``num_pages * page_size / max_len``.  ``kv_layout="dense"`` keeps the
-seed's ``[max_batch, max_len]`` buffers for A/B comparison, and
+sequence (free its pages, requeue, recompute on readmission) — now also
+*between prefill chunks*, so a half-prefilled long prompt can yield its
+pages.  ``kv_layout="dense"`` keeps the seed's ``[max_batch, max_len]``
+buffers for A/B comparison (dense implies ``prefill_mode="wave"``), and
 ``bucket_mode="fixed"`` + ``batch_prefill=False`` reproduces the seed
 scheduler exactly.
 """
@@ -63,8 +82,10 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     slot: int = -1
     pos: int = 0                # next position to fill
+    n_ctx: int = 0              # context tokens to prefill (this admission)
     done: bool = False
     preempted: int = 0          # times evicted under page pressure
+    preempted_in_prefill: int = 0   # of those, evictions between chunks
 
     def context_tokens(self) -> np.ndarray:
         """Tokens to (re)prefill: the prompt plus anything generated
@@ -73,6 +94,10 @@ class Request:
             return self.prompt
         return np.concatenate(
             [self.prompt, np.asarray(self.generated, np.int32)])
+
+    @property
+    def prefilling(self) -> bool:
+        return self.pos < self.n_ctx
 
 
 @dataclasses.dataclass
@@ -84,16 +109,23 @@ class EngineConfig:
     prefill_algo: str = "eplb"
     rebalance_every: int = 64   # decode steps between EPLB rebalances
     load_ewma: float = 0.9
-    prefill_chunk: int = 64     # chunked prefill (sarathi-style)
+    prefill_chunk: int = 64     # tokens per prefill chunk
     greedy: bool = True
     seed: int = 0
     # --- scheduling ---
     bucket_mode: str = "pow2"   # "pow2" | "fixed" (seed: pad to max_batch)
-    batch_prefill: bool = True  # pack the admitted wave into one call
+    batch_prefill: bool = True  # (wave mode) pack the wave into one call
     max_wave: int = 0           # prefill wave cap; 0 -> max_batch
     bucket_compile_grace: int = 4   # steps a cold bucket rounds up to a
                                     # compiled one before earning its own
                                     # compile (0 = always compile exact)
+    # --- chunked / mixed prefill ---
+    prefill_mode: str = "chunked"   # "chunked" | "wave" (seed monolith)
+    mixed_prefill_budget: int = 0   # max prefill tokens per iteration
+                                    # (0 = every prefilling row advances
+                                    # one full chunk per iteration)
+    mixed_steps: bool = True        # fuse prefill chunks + decode into
+                                    # one call when both phases have rows
     # --- KV layout ---
     kv_layout: str = "paged"    # "paged" | "dense" (seed layout)
     page_size: int = 16         # tokens per KV page
@@ -110,6 +142,7 @@ class ServingEngine:
                  ecfg: EngineConfig, routing_table_width: int = 0):
         assert ecfg.bucket_mode in ("pow2", "fixed"), ecfg.bucket_mode
         assert ecfg.kv_layout in ("paged", "dense"), ecfg.kv_layout
+        assert ecfg.prefill_mode in ("chunked", "wave"), ecfg.prefill_mode
         self.cfg = cfg
         self.dist = dist
         self.ecfg = ecfg
@@ -121,8 +154,14 @@ class ServingEngine:
         self.free_slots = list(range(ecfg.max_batch))
         self.decode_steps = 0
         self.expert_loads = np.ones(max(cfg.num_experts, 1))
+        self.expert_hist_log: list[np.ndarray] = []
         self._table_width = routing_table_width
         self._next_rid = 0
+        # chunked prefill needs the paged pool (attention chunks resume
+        # against already-written pages); dense layout keeps the seed's
+        # monolithic wave path.
+        self.chunked = (ecfg.prefill_mode == "chunked"
+                        and ecfg.kv_layout == "paged")
 
         if cfg.is_moe:
             self.placement = build_placement(
@@ -152,7 +191,8 @@ class ServingEngine:
             self.kvman = None
             self.cache = LM.init_cache(cfg, dist, ecfg.max_batch,
                                        ecfg.max_len)
-        self._fns: dict[str, dict] = {"decode": {}, "prefill": {}}
+        self._fns: dict[str, dict] = {"decode": {}, "prefill": {},
+                                      "chunk": {}, "mixed": {}}
         self._bucket_demand: dict[int, int] = {}
 
     # ------------------------------------------------------------------
@@ -245,6 +285,57 @@ class ServingEngine:
             return step
         return self._get_fn("prefill", (batch, length), build)
 
+    def _chunk_fn(self, batch: int):
+        """One resumable prefill chunk for ``batch`` rows: [B, C] tokens
+        written straight into the paged serving cache (no wave scratch,
+        no O(max_len) buffer — C = prefill_chunk is the only length)."""
+        def build():
+            cfg, dist, ecfg = self.cfg, self.dist, self.ecfg
+            c = ecfg.prefill_chunk
+
+            @jax.jit
+            def step(params, tokens, start, n_tok, slot_idx, page_table,
+                     cache, routing):
+                _, new_cache, stats = LM.apply_lm(
+                    cfg, dist, params, tokens=tokens, pos=start,
+                    cache=cache, routing=routing, mode="chunk_prefill",
+                    algo=ecfg.prefill_algo, slot_idx=slot_idx,
+                    page_table=page_table,
+                    row_valid=jnp.arange(c)[None, :] < n_tok[:, None])
+                return new_cache, stats
+            return step
+        return self._get_fn("chunk", batch, build)
+
+    def _mixed_fn(self, bp: int, bd: int):
+        """Fused mixed step: ``bp`` prefill-chunk rows and ``bd`` decode
+        rows in ONE jitted call — the chunk sub-graph writes its pages,
+        then the decode sub-graph runs against the updated cache, exactly
+        the pure-phase chunk-then-decode sequence (bitwise: the
+        equivalence test), but decode no longer waits for a dispatch."""
+        def build():
+            cfg, dist, ecfg = self.cfg, self.dist, self.ecfg
+            c = ecfg.prefill_chunk
+
+            @jax.jit
+            def step(params, p_tokens, p_start, p_ntok, p_slot, p_pt,
+                     d_tokens, d_pos, d_slot, d_pt, cache, routing):
+                _, cache1, st_p = LM.apply_lm(
+                    cfg, dist, params, tokens=p_tokens, pos=p_start,
+                    cache=cache, routing=routing, mode="chunk_prefill",
+                    algo=ecfg.prefill_algo, slot_idx=p_slot,
+                    page_table=p_pt,
+                    row_valid=jnp.arange(c)[None, :] < p_ntok[:, None])
+                logits, cache2, st_d = LM.apply_lm(
+                    cfg, dist, params, tokens=d_tokens, pos=d_pos,
+                    cache=cache1, routing=routing, mode="decode",
+                    algo=ecfg.decode_algo, slot_idx=d_slot,
+                    page_table=d_pt,
+                    row_valid=d_slot < ecfg.max_batch)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return nxt, cache2, st_p, st_d
+            return step
+        return self._get_fn("mixed", (bp, bd), build)
+
     # ------------------------------------------------------------------
     # admission / paging
     # ------------------------------------------------------------------
@@ -260,40 +351,91 @@ class ServingEngine:
         return rid
 
     def _admit(self) -> list[Request]:
-        admitted = []
+        """Admit waiting requests into free slots.
+
+        Chunked prefill only needs pages for a request's FIRST chunk, so
+        a page-blocked request no longer blocks the whole queue: the
+        scan continues past it and admits any later request that fits
+        (slots stay strictly FCFS — running out of slots stops the
+        scan).  ``prefill_mode="wave"`` needs every context page up
+        front and keeps the seed's strict head-of-line gate.
+        """
+        admitted: list[Request] = []
+        if not self.queue or not self.free_slots:
+            return admitted
+        remaining: deque[Request] = deque()    # page-blocked, scanned past
         while self.queue and self.free_slots:
-            r = self.queue[0]
+            r = self.queue.popleft()
             n_ctx = min(len(r.context_tokens()), self.ecfg.max_len - 1)
-            if self.kvman is not None:
-                need = pages_for(n_ctx, self.ecfg.page_size)
-                if need > self.kvman.num_free:
-                    break           # FCFS head-of-line: wait for pages
-            self.queue.popleft()
+            first = min(n_ctx, self.ecfg.prefill_chunk) if self.chunked \
+                else n_ctx
+            if self.kvman is not None and \
+                    pages_for(first, self.ecfg.page_size) \
+                    > self.kvman.num_free:
+                remaining.append(r)
+                if not self.chunked:
+                    break               # strict FCFS: wait for pages
+                continue
             r.slot = self.free_slots.pop()
+            r.n_ctx = n_ctx
+            r.pos = 0
             if self.kvman is not None:
-                ok = self.kvman.ensure(r.slot, n_ctx)
+                ok = self.kvman.ensure(r.slot, first)
                 assert ok, "admission page reservation failed"
             self.active[r.rid] = r
             admitted.append(r)
+            self.slo.admitted(r.rid)
+        # splice the untouched tail back (skipped requests were earlier
+        # in the queue, so relative order is preserved); O(1) when the
+        # scan never started
+        remaining.extend(self.queue)
+        self.queue = remaining
         return admitted
 
     def _preempt_one(self, protect_rid: int) -> bool:
         """Evict the youngest active request (≠ protect_rid): free its
-        pages + slot and requeue it for recompute-on-readmission."""
+        pages + slot and requeue it for recompute-on-readmission.  A
+        victim caught *between prefill chunks* releases every page it
+        has written so far; readmission recomputes bitwise to the state
+        an unpreempted run would have reached (the prefill-phase
+        regression test).  A victim caught mid-DECODE replays
+        prompt+generated as context, which collapses the re-fed
+        boundary token the continued run kept at position n_ctx — its
+        continuation is correct-by-recompute but not bitwise the
+        unpreempted one (seed semantics, unchanged)."""
         victims = [r for r in self.active.values() if r.rid != protect_rid]
         if not victims:
             return False
         v = max(victims, key=lambda r: r.rid)
+        if v.prefilling:
+            v.preempted_in_prefill += 1
         self.kvman.release(v.slot)
         self.free_slots.append(v.slot)
         del self.active[v.rid]
-        v.slot, v.pos, v.preempted = -1, 0, v.preempted + 1
+        v.slot, v.pos, v.n_ctx, v.preempted = -1, 0, 0, v.preempted + 1
         self.queue.appendleft(v)
         self.slo.preemptions += 1
         return True
 
+    def _reserve(self, targets: list[tuple[Request, int]]):
+        """Grow each target row's page table to cover ``want`` tokens,
+        preempting the youngest other sequences under pool pressure.
+        Oldest targets reserve first; a target that was itself evicted
+        by an earlier reservation is skipped."""
+        if self.kvman is None:
+            return
+        for r, want in sorted(targets, key=lambda t: t[0].rid):
+            if r.rid not in self.active:
+                continue
+            want = min(want, self.ecfg.max_len)
+            while not self.kvman.ensure(r.slot, want):
+                if not self._preempt_one(protect_rid=r.rid):
+                    raise RuntimeError(
+                        "KV page pool exhausted by a single sequence; "
+                        "num_pages must be >= ceil(max_len/page_size)")
+
     # ------------------------------------------------------------------
-    # prefill (batched wave)
+    # prefill — monolithic wave path (prefill_mode="wave" / dense KV)
     # ------------------------------------------------------------------
     def _prefill_wave(self, wave: list[Request]):
         group_cap = (self.ecfg.max_wave or self.ecfg.max_batch) \
@@ -316,6 +458,7 @@ class ServingEngine:
             toks[i, :lens[i]] = ctxs[i][:lens[i]]
             lengths[i] = lens[i]
             slot_idx[i] = r.slot
+            self.slo.prefill_started(r.rid)
         if self.kvman is not None:
             pt[:len(group)] = self.kvman.rows([r.slot for r in group])
         fn = self._prefill_fn(b, l_pad)
@@ -325,16 +468,133 @@ class ServingEngine:
             jnp.asarray(slot_idx), jnp.asarray(pt), self.cache,
             self.routing)
         jax.block_until_ready(stats)
-        self.slo.step("prefill", time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.slo.step("prefill", dt)
+        gids = {r.rid for r in group}
+        if any(not r.prefilling for r in self.active.values()
+               if r.rid not in gids):
+            self.slo.stall("prefill", dt)
         for r, n in zip(group, lens):
             r.pos = n
+            self.slo.chunk_done(r.rid)
+            self.slo.prefill_done(r.rid)
         self._update_loads(stats)
+
+    # ------------------------------------------------------------------
+    # prefill — resumable chunked path (the default)
+    # ------------------------------------------------------------------
+    def _plan_chunks(self) -> list[tuple[Request, int]]:
+        """Pick this iteration's prefill work: each prefilling row gets
+        up to one ``prefill_chunk`` of its remaining context, FCFS by
+        rid, capped globally by ``mixed_prefill_budget`` tokens (0 = no
+        cap).  Partial chunks are free — the chunk call has one static
+        shape and masks per-row tails."""
+        budget = self.ecfg.mixed_prefill_budget or None
+        work: list[tuple[Request, int]] = []
+        for r in sorted(self.active.values(), key=lambda r: r.rid):
+            if not r.prefilling:
+                continue
+            n = min(r.n_ctx - r.pos, self.ecfg.prefill_chunk)
+            if budget is not None:
+                n = min(n, budget)
+                if n <= 0:
+                    break
+                budget -= n
+            work.append((r, n))
+        return work
+
+    def _chunk_inputs(self, pwork: list[tuple[Request, int]], b: int):
+        ecfg = self.ecfg
+        c = ecfg.prefill_chunk
+        pmax = pages_for(ecfg.max_len, ecfg.page_size)
+        toks = np.zeros((b, c), np.int32)
+        start = np.zeros((b,), np.int32)
+        n_tok = np.zeros((b,), np.int32)
+        slot_idx = np.full((b,), ecfg.max_batch, np.int32)
+        pt = np.full((b, pmax), -1, np.int32)
+        for i, (r, n) in enumerate(pwork):
+            ctx = r.context_tokens()
+            toks[i, :n] = ctx[r.pos:r.pos + n]
+            start[i] = r.pos
+            n_tok[i] = n
+            slot_idx[i] = r.slot
+        pt[:len(pwork)] = self.kvman.rows([r.slot for r, _ in pwork])
+        return (jnp.asarray(toks), jnp.asarray(start), jnp.asarray(n_tok),
+                jnp.asarray(slot_idx), jnp.asarray(pt))
+
+    def _decode_inputs(self, drows: list[Request], b: int):
+        ecfg = self.ecfg
+        pmax = pages_for(ecfg.max_len, ecfg.page_size)
+        tokens = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        slot_idx = np.full((b,), ecfg.max_batch, np.int32)
+        pt = np.full((b, pmax), -1, np.int32)
+        for i, r in enumerate(drows):
+            tokens[i, 0] = (r.generated[-1] if r.generated
+                            else int(r.context_tokens()[-1]))
+            # a row finishing its prefill THIS iteration decodes at
+            # n_ctx (its r.pos advances when the chunk completes); an
+            # already-decoding row is simply at r.pos.  (n_ctx +
+            # len(generated) would be wrong after a mid-decode
+            # preemption: the re-prefilled n_ctx already contains the
+            # generated tokens.)
+            pos[i] = r.n_ctx if r.prefilling else r.pos
+            slot_idx[i] = r.slot
+        if self.kvman is not None:
+            pt[:len(drows)] = self.kvman.rows([r.slot for r in drows])
+        return (jnp.asarray(tokens), jnp.asarray(pos),
+                jnp.asarray(slot_idx), jnp.asarray(pt))
+
+    def _start_chunks(self, pwork: list[tuple[Request, int]]):
+        """Stamp prefill_start BEFORE the chunk-carrying call is issued
+        (the wave path does the same), so the first chunk's time lands
+        in the TTFT prefill span, not the queue wait."""
+        for r, _ in pwork:
+            if r.pos == 0:
+                self.slo.prefill_started(r.rid)
+
+    def _finish_chunks(self, pwork: list[tuple[Request, int]]):
+        for r, n in pwork:
+            r.pos += n
+            self.slo.chunk_done(r.rid)
+            if not r.prefilling:
+                self.slo.prefill_done(r.rid)
+
+    def _postprocess_decode(self, drows: list[Request], nxt: np.ndarray):
+        for i, r in enumerate(drows):
+            tok = int(nxt[i])
+            if not r.generated:
+                self.slo.first_token(r.rid)
+            else:
+                self.slo.token(r.rid)
+            r.generated.append(tok)
+            r.pos += 1
+            if (len(r.generated) >= r.max_new_tokens
+                    or r.pos >= self.ecfg.max_len - 1):
+                r.done = True
+                self.slo.finish(r.rid)
+                self.free_slots.append(r.slot)
+                if self.kvman is not None:
+                    self.kvman.release(r.slot)
+                self.completed[r.rid] = r
+                del self.active[r.rid]
+        self.decode_steps += 1
+        if (self.cfg.is_moe and self.ecfg.rebalance_every
+                and self.decode_steps % self.ecfg.rebalance_every == 0):
+            self.rebalance()
+
+    # per-call expert_hist log (equivalence tests); bounded so a
+    # long-running engine doesn't grow it without limit
+    _HIST_LOG_CAP = 8192
 
     def _update_loads(self, stats):
         if not self.cfg.is_moe:
             return
         h = np.asarray(stats["expert_hist"])
         if h.shape[0] == self.cfg.num_experts:
+            self.expert_hist_log.append(h)
+            if len(self.expert_hist_log) > self._HIST_LOG_CAP:
+                del self.expert_hist_log[:self._HIST_LOG_CAP // 2]
             a = self.ecfg.load_ewma
             self.expert_loads = a * self.expert_loads + (1 - a) * (h + 1e-3)
 
@@ -366,71 +626,21 @@ class ServingEngine:
             return b
         return min(bigger)
 
-    def _grow_pages(self):
-        """Make sure every active sequence has a page for this step's
-        token, preempting the youngest sequences under pool pressure."""
-        if self.kvman is None:
+    def _decode_rows(self, drows: list[Request]):
+        if not drows:
             return
-        for r in sorted(self.active.values(), key=lambda r: r.rid):
-            if r.rid not in self.active:    # evicted by a prior grow
-                continue
-            want = min(r.pos + 1, self.ecfg.max_len)
-            while not self.kvman.ensure(r.slot, want):
-                if not self._preempt_one(protect_rid=r.rid):
-                    raise RuntimeError(
-                        "KV page pool exhausted by a single sequence; "
-                        "num_pages must be >= ceil(max_len/page_size)")
-
-    def _decode_all(self):
-        if not self.active:
-            return
-        self._grow_pages()
-        actives = sorted(self.active.values(), key=lambda r: r.slot)
-        n = len(actives)
+        n = len(drows)
         b = self._bucket(n)
-        ecfg = self.ecfg
-        pmax = pages_for(ecfg.max_len, ecfg.page_size)
-        tokens = np.zeros((b, 1), np.int32)
-        pos = np.zeros((b,), np.int32)
-        slot_idx = np.full((b,), ecfg.max_batch, np.int32)
-        pt = np.full((b, pmax), -1, np.int32)
-        for i, r in enumerate(actives):
-            tokens[i, 0] = (r.generated[-1] if r.generated
-                            else int(r.context_tokens()[-1]))
-            pos[i] = r.pos
-            slot_idx[i] = r.slot
-        if self.kvman is not None:
-            pt[:n] = self.kvman.rows([r.slot for r in actives])
+        tokens, pos, slot_idx, pt = self._decode_inputs(drows, b)
         fn = self._decode_fn(b)
         t0 = time.perf_counter()
         nxt, self.cache, stats = fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(pos),
-            jnp.asarray(slot_idx), jnp.asarray(pt), self.cache,
+            self.params, tokens, pos, slot_idx, pt, self.cache,
             self.routing)
         nxt = np.asarray(nxt)
         self.slo.step("decode", time.perf_counter() - t0)
-        self.decode_steps += 1
         self._update_loads(stats)
-        for i, r in enumerate(actives):
-            tok = int(nxt[i])
-            if not r.generated:
-                self.slo.first_token(r.rid)
-            else:
-                self.slo.token(r.rid)
-            r.generated.append(tok)
-            r.pos += 1
-            if (len(r.generated) >= r.max_new_tokens
-                    or r.pos >= self.ecfg.max_len - 1):
-                r.done = True
-                self.slo.finish(r.rid)
-                self.free_slots.append(r.slot)
-                if self.kvman is not None:
-                    self.kvman.release(r.slot)
-                self.completed[r.rid] = r
-                del self.active[r.rid]
-        if (self.cfg.is_moe and self.ecfg.rebalance_every
-                and self.decode_steps % self.ecfg.rebalance_every == 0):
-            self.rebalance()
+        self._postprocess_decode(drows, nxt)
 
     # ------------------------------------------------------------------
     @property
@@ -438,12 +648,87 @@ class ServingEngine:
         return bool(self.queue or self.active)
 
     def step(self):
-        """One engine iteration: admit -> wave prefill -> decode."""
+        """One engine iteration."""
         self.slo.queue_depth(len(self.queue))
-        wave = self._admit()
-        if wave:
-            self._prefill_wave(wave)
-        self._decode_all()
+        admitted = self._admit()
+        if not self.chunked:
+            # seed scheduler: monolithic wave prefill, then decode all
+            if admitted:
+                self._prefill_wave(admitted)
+            self._reserve([(r, min(r.pos + 1, self.ecfg.max_len))
+                           for r in self.active.values()])
+            self._decode_rows(sorted(self.active.values(),
+                                     key=lambda r: r.slot))
+            return
+        self._step_chunked()
+
+    def _step_chunked(self):
+        ecfg = self.ecfg
+        pwork = self._plan_chunks()
+        # decode set: rows already decoding, plus rows whose prefill
+        # completes with this iteration's chunk (they re-feed their last
+        # context token at position n_ctx, same as the wave scheduler)
+        finishing = {r.rid for r, n in pwork if r.pos + n >= r.n_ctx}
+        targets = [(r, r.pos + n + (1 if r.rid in finishing else 0))
+                   for r, n in pwork]
+        targets += [(r, r.pos + 1) for r in self.active.values()
+                    if not r.prefilling]
+        self._reserve(targets)     # may preempt scheduled rows: filter
+        pwork = [(r, n) for r, n in pwork if r.rid in self.active]
+        finishing = {r.rid for r, n in pwork if r.pos + n >= r.n_ctx}
+        drows = [r for r in self.active.values()
+                 if not r.prefilling or r.rid in finishing]
+        drows.sort(key=lambda r: r.slot)
+
+        if pwork and drows and ecfg.mixed_steps:
+            self._mixed_step(pwork, drows)
+            return
+        if pwork:
+            bp = _pow2(len(pwork))
+            self._start_chunks(pwork)
+            toks, start, n_tok, slot_idx, pt = self._chunk_inputs(pwork, bp)
+            fn = self._chunk_fn(bp)
+            t0 = time.perf_counter()
+            self.cache, stats = fn(self.params, toks, start, n_tok,
+                                   slot_idx, pt, self.cache, self.routing)
+            jax.block_until_ready(stats)
+            dt = time.perf_counter() - t0
+            self.slo.step("chunk", dt)
+            if any(r.rid not in finishing for r in drows):
+                # pure-phase mode: PRE-EXISTING decode rows sat out the
+                # chunk call (rows finishing prefill in this very call
+                # were not waiting on anything)
+                self.slo.stall("chunk", dt)
+            self._update_loads(stats)
+            self._finish_chunks(pwork)
+        self._decode_rows(drows)
+
+    def _mixed_step(self, pwork: list[tuple[Request, int]],
+                    drows: list[Request]):
+        """Sarathi-style piggybacked iteration: ONE call runs the chunk
+        tokens and the decode tokens, so decode rows never stall behind
+        prefill (no ``slo.stall`` is recorded — there is nothing to
+        wait for)."""
+        bp = _pow2(len(pwork))
+        bd = self._bucket(len(drows))
+        self._start_chunks(pwork)
+        p_toks, p_start, p_ntok, p_slot, p_pt = \
+            self._chunk_inputs(pwork, bp)
+        # decode inputs are computed AFTER the chunk advances each
+        # finishing row, so build them from the planned post-chunk state
+        d_toks, d_pos, d_slot, d_pt = self._decode_inputs(drows, bd)
+        fn = self._mixed_fn(bp, bd)
+        t0 = time.perf_counter()
+        nxt, self.cache, st_p, st_d = fn(
+            self.params, p_toks, p_start, p_ntok, p_slot, p_pt,
+            d_toks, d_pos, d_slot, d_pt, self.cache, self.routing)
+        nxt = np.asarray(nxt)
+        self.slo.step("mixed", time.perf_counter() - t0)
+        # same update order as the pure-phase sequence it replaces
+        self._update_loads(st_p)
+        self._update_loads(st_d)
+        self._finish_chunks(pwork)
+        self._postprocess_decode(drows, nxt)
 
     def run(self, max_iters: int = 10_000):
         """Run until queue + active drain (or max_iters)."""

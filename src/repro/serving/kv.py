@@ -105,3 +105,26 @@ class PagedKVManager:
     def rows(self, slots: np.ndarray) -> np.ndarray:
         """Page-table rows for a batch of slots (copy; safe to mutate)."""
         return self.page_table[np.asarray(slots, np.int64)].copy()
+
+    # ------------------------------------------------------------------
+    # invariants (used by the preemption/chunking regression tests)
+    # ------------------------------------------------------------------
+    def mapped_pages(self) -> np.ndarray:
+        """Sorted physical ids of every currently-mapped page."""
+        return np.sort(self.page_table[self.page_table >= 0])
+
+    def check_consistent(self):
+        """Assert the allocator invariants: no physical page is mapped
+        twice (chunk-resume must never double-write a page), the free
+        list is disjoint from the mapped set, and together they cover
+        the pool exactly."""
+        mapped = self.mapped_pages()
+        assert len(mapped) == len(np.unique(mapped)), \
+            "a physical page is mapped by two table entries"
+        free = np.asarray(self._free, np.int64)
+        assert len(np.intersect1d(mapped, free)) == 0, \
+            "a free page is still mapped"
+        assert len(mapped) + len(free) == self.num_pages, \
+            "pages leaked: mapped + free != pool"
+        assert int(self._owned.sum()) == len(mapped), \
+            "per-slot owned counts disagree with the table"

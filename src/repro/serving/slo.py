@@ -1,12 +1,28 @@
 """Latency/SLO bookkeeping: TTFT, TPOT, throughput, percentiles, and
 engine-health counters (step-function compiles, preemptions, queue
-depth).
+depth, decode-stall attribution).
 
 The compile counter is the observable for batch bucketing: every time
 the engine builds a step function for a new (kind, signature) pair it
 calls :meth:`compiled`, so ``summary()["total_compiles"]`` counts XLA
 tracings — the quantity power-of-two bucketing + wave prefill bound to
-O(log max_batch + log max_len) regardless of trace length.
+O(log max_batch · log max_len) regardless of trace length.
+
+Chunked prefill adds two attributions:
+
+  * **TTFT decomposition** — each request's TTFT splits into queue wait
+    (arrival → admission), prefill span (first chunk issued → last chunk
+    done) and decode wait (prefill done → first token), via the
+    :meth:`admitted` / :meth:`prefill_started` / :meth:`prefill_done`
+    events the engine emits per chunk boundary.
+  * **decode-stall attribution** — :meth:`stall` records every second a
+    prefill-carrying call ran while decode-phase rows sat waiting
+    (wave prefill stalls for the whole prompt, chunked prefill for one
+    chunk, mixed steps not at all — decode rides in the same call).
+
+All timestamps come from an injectable ``clock`` (defaults to
+``time.perf_counter``), so every derived metric is unit-testable on
+hand-built timelines (tests/test_slo.py).
 """
 from __future__ import annotations
 
@@ -20,10 +36,14 @@ import numpy as np
 @dataclasses.dataclass
 class RequestTiming:
     arrival: float
+    admitted: float = 0.0        # last admission (re-set on readmission)
+    prefill_start: float = 0.0   # first prefill chunk issued
+    prefill_done: float = 0.0    # last prefill chunk finished
     first_token: float = 0.0
     finished: float = 0.0
     n_prompt: int = 0
     n_generated: int = 0
+    n_chunks: int = 0            # prefill chunks run (recompute included)
 
     @property
     def ttft(self) -> float:
@@ -35,26 +55,71 @@ class RequestTiming:
             return 0.0
         return (self.finished - self.first_token) / (self.n_generated - 1)
 
+    # --- TTFT decomposition (valid once first_token is set) ---
+    @property
+    def queue_wait(self) -> float:
+        return (self.admitted or self.first_token) - self.arrival
+
+    @property
+    def prefill_span(self) -> float:
+        if not self.prefill_start:
+            return 0.0
+        return (self.prefill_done or self.first_token) - self.prefill_start
+
+    @property
+    def decode_wait(self) -> float:
+        if not self.prefill_done:
+            return 0.0
+        return self.first_token - self.prefill_done
+
 
 def _pct(a: np.ndarray, q: float) -> float:
     return float(np.percentile(a, q)) if len(a) else 0.0
 
 
 class SLOTracker:
-    def __init__(self):
+    def __init__(self, clock=None):
+        self._clock = clock or time.perf_counter
         self.timings: dict[int, RequestTiming] = {}
         self.step_latencies: list[tuple[str, float]] = []
         self.compile_events: dict[str, list] = defaultdict(list)
         self.queue_depths: list[int] = []
         self.preemptions = 0
-        self._t0 = time.perf_counter()
+        self.stalls: list[tuple[str, float]] = []   # (kind, seconds)
+        self._t0 = self._clock()
 
     def now(self) -> float:
-        return time.perf_counter() - self._t0
+        return self._clock() - self._t0
 
     def arrive(self, rid: int, n_prompt: int):
         self.timings[rid] = RequestTiming(arrival=self.now(),
                                           n_prompt=n_prompt)
+
+    def admitted(self, rid: int):
+        # TTFT decomposition events freeze once the first token is out:
+        # a mid-decode preemption re-admits and re-prefills (recompute),
+        # and re-stamping would make decode_wait negative / queue_wait
+        # exceed TTFT.  (n_chunks keeps counting — recompute work is
+        # real work.)
+        t = self.timings[rid]
+        if t.first_token == 0.0:
+            t.admitted = self.now()
+
+    def prefill_started(self, rid: int):
+        t = self.timings[rid]
+        if t.prefill_start == 0.0:
+            t.prefill_start = self.now()
+
+    def chunk_done(self, rid: int):
+        self.timings[rid].n_chunks += 1
+
+    def prefill_done(self, rid: int):
+        # pre-first-token re-stamps are correct (a preempted-then-
+        # recomputed prefill's LAST completion is what gates the first
+        # token); post-first-token ones are recompute and are ignored
+        t = self.timings[rid]
+        if t.first_token == 0.0:
+            t.prefill_done = self.now()
 
     def first_token(self, rid: int):
         t = self.timings[rid]
@@ -76,7 +141,7 @@ class SLOTracker:
     # ------------------------------------------------------------------
     def compiled(self, kind: str, key):
         """Record one step-function compile of the given kind ("decode" /
-        "prefill") and shape signature (e.g. the batch bucket)."""
+        "prefill" / "chunk" / "mixed") and shape signature."""
         self.compile_events[kind].append(key)
 
     def compile_count(self, kind: str) -> int:
@@ -88,6 +153,11 @@ class SLOTracker:
 
     def queue_depth(self, depth: int):
         self.queue_depths.append(depth)
+
+    def stall(self, kind: str, seconds: float):
+        """Attribute ``seconds`` of decode stall to a prefill-carrying
+        call of the given kind that ran while decode rows waited."""
+        self.stalls.append((kind, seconds))
 
     # ------------------------------------------------------------------
     def summary(self) -> dict:
@@ -103,13 +173,23 @@ class SLOTracker:
             by_kind[k].append(s)
         dec = np.asarray(by_kind.get("decode", []))
         pre = np.asarray(by_kind.get("prefill", []))
+        chk = np.asarray(by_kind.get("chunk", []))
+        mix = np.asarray(by_kind.get("mixed", []))
         qd = np.asarray(self.queue_depths)
+        stalls = np.asarray([s for _, s in self.stalls])
         return {
             "requests": len(done),
             "ttft_mean": float(ttfts.mean()),
             "ttft_p50": _pct(ttfts, 50),
             "ttft_p90": _pct(ttfts, 90),
             "ttft_p99": _pct(ttfts, 99),
+            # TTFT decomposition (chunk-level attribution)
+            "ttft_queue_mean": float(np.mean([t.queue_wait for t in done])),
+            "ttft_prefill_mean": float(
+                np.mean([t.prefill_span for t in done])),
+            "ttft_decode_wait_mean": float(
+                np.mean([t.decode_wait for t in done])),
+            "prefill_chunks": sum(t.n_chunks for t in done),
             "tpot_mean": float(tpots.mean()) if len(tpots) else 0.0,
             "tpot_p50": _pct(tpots, 50),
             "tpot_p90": _pct(tpots, 90),
@@ -117,15 +197,27 @@ class SLOTracker:
             "total_token_throughput": total_tokens / max(wall, 1e-9),
             "decode_steps": len(dec),
             "prefill_steps": len(pre),
+            "chunk_steps": len(chk),
+            "mixed_steps": len(mix),
             "decode_step_mean_s": float(dec.mean()) if len(dec) else 0.0,
             "decode_step_p50_s": _pct(dec, 50),
             "decode_step_p99_s": _pct(dec, 99),
             "prefill_step_p50_s": _pct(pre, 50),
             "prefill_step_p99_s": _pct(pre, 99),
+            "chunk_step_p99_s": _pct(chk, 99),
+            "mixed_step_p99_s": _pct(mix, 99),
             "decode_compiles": self.compile_count("decode"),
             "prefill_compiles": self.compile_count("prefill"),
+            "chunk_compiles": self.compile_count("chunk"),
+            "mixed_compiles": self.compile_count("mixed"),
             "total_compiles": self.total_compiles,
             "preemptions": self.preemptions,
+            # decode-stall attribution
+            "decode_stall_events": len(stalls),
+            "decode_stall_total_s": float(stalls.sum()) if len(stalls)
+            else 0.0,
+            "decode_stall_max_s": float(stalls.max()) if len(stalls)
+            else 0.0,
             "queue_depth_mean": float(qd.mean()) if len(qd) else 0.0,
             "queue_depth_max": int(qd.max()) if len(qd) else 0,
         }

@@ -1,8 +1,16 @@
-"""Shared pytest configuration: marker registration + src-layout path.
+"""Shared pytest configuration: marker registration + src-layout path +
+hypothesis profiles.
 
 Markers:
   fast — cheap unit tests (default CI gate runs ``-m "not slow"``).
   slow — engine/benchmark integration tests that jit full model steps.
+
+Hypothesis profiles (``HYPOTHESIS_PROFILE`` env var, default "ci"):
+  ci      — few examples; keeps property suites inside the fast gate.
+  nightly — the slow profile the nightly CI job runs: many more random
+            prompts/chunk-splits through the chunked-prefill equivalence
+            suite.  Tests that pin their own ``max_examples`` in a
+            ``@settings`` decorator are unaffected by the profile.
 """
 import os
 import sys
@@ -11,6 +19,15 @@ import sys
 _SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=10, deadline=None)
+    settings.register_profile("nightly", max_examples=100, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:          # hypothesis is optional (tests importorskip)
+    pass
 
 
 def pytest_configure(config):

@@ -1,0 +1,231 @@
+"""Chunked-prefill equivalence harness (the PR's lock-down suite).
+
+The resumable chunk path (``apply_lm(mode="chunk_prefill")``) has an
+exact reference semantics: ONE chunk call covering the whole prompt.
+These tests pin the equivalence **bit-for-bit** — logits AND the KV
+pages / mamba state left behind — for every mixer type (full attention,
+sliding-window, mamba) under random prompts and random chunk splits
+(hypothesis), plus deterministic fixed-split cases that run even on
+minimal installs.
+
+Chunk calls go through ONE jitted entry point per arch, so a chunk size
+compiles once and every later split reuses it (token-at-a-time splits
+are nearly free); the engine-level integration (mixed steps,
+preemption) lives in tests/test_mixed_steps.py.
+
+Also here (it needs an engine object but never jits a step): the
+admission skip-ahead regression — once chunked prefill makes partial
+admission safe, a page-blocked long prompt must not starve admissible
+short prompts behind it.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import build_placement, slots_for_ratio
+from repro.models import init_lm
+from repro.models import lm as LM
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.kv import PagedKVManager, pages_for
+from repro.sharding.policy import make_dist
+
+pytestmark = pytest.mark.fast
+
+MAX_LEN, PS = 32, 8
+
+# one arch per mixer family: pure full-attention MoE, SWA+full
+# interleave, pure mamba, and the mamba+attn+MoE hybrid
+ARCHS = ["mixtral-8x22b", "gemma3-12b", "falcon-mamba-7b",
+         "jamba-1.5-large-398b"]
+
+_SETUP_CACHE: dict = {}
+
+
+def _setup(name):
+    if name in _SETUP_CACHE:
+        return _SETUP_CACHE[name]
+    cfg = get_config(name).reduced()
+    ep = 4
+    spd = slots_for_ratio(cfg.num_experts, ep, 1.25) if cfg.is_moe else 1
+    dist = make_dist(None, ep_size=ep, slots_per_device=spd)
+    placement = (build_placement(cfg.num_experts, ep, spd)
+                 if cfg.is_moe else None)
+    params = init_lm(cfg, jax.random.PRNGKey(0), dist,
+                     replica_expert=placement.replica_expert
+                     if placement else None)
+    routing = (LM.build_lm_routing(cfg, placement)
+               if cfg.is_moe else {})
+    _SETUP_CACHE[name] = (cfg, dist, params, routing)
+    return _SETUP_CACHE[name]
+
+
+_FN_CACHE: dict = {}
+
+
+def _chunk_call(name, algo):
+    """Jitted chunk_prefill entry per (arch, algo): a chunk size
+    compiles once and is reused for every split that needs it."""
+    key = (name, algo)
+    if key not in _FN_CACHE:
+        cfg, dist, _, _ = _setup(name)
+
+        @jax.jit
+        def fn(params, routing, toks, start, slot_idx, pt, rv, cache):
+            lg, cache, _ = LM.apply_lm(
+                cfg, dist, params, tokens=toks, pos=start, cache=cache,
+                routing=routing, mode="chunk_prefill", algo=algo,
+                slot_idx=slot_idx, page_table=pt, row_valid=rv)
+            return lg, cache
+        _FN_CACHE[key] = fn
+    return _FN_CACHE[key]
+
+
+def _run_split(name, prompt, splits, algo="eplb"):
+    """Prefill ``prompt`` through the chunk path in the given splits.
+
+    Returns (logits [n, V] over all real positions, cache leaves)."""
+    cfg, dist, params, routing = _setup(name)
+    fn = _chunk_call(name, algo)
+    pmax = pages_for(MAX_LEN, PS)
+    man = PagedKVManager(num_pages=2 * pmax, page_size=PS,
+                         max_pages_per_seq=pmax, max_seqs=2)
+    cache = LM.init_paged_cache(cfg, dist, 2 * pmax, PS, 2)
+    pos, logits_all = 0, []
+    for c in splits:
+        toks = np.asarray(prompt[pos:pos + c], np.int32)[None, :]
+        assert man.ensure(0, pos + c)
+        lg, cache = fn(
+            params, routing, jax.numpy.asarray(toks),
+            jax.numpy.asarray([pos], np.int32),
+            jax.numpy.asarray([0], np.int32),
+            jax.numpy.asarray(man.rows([0])),
+            jax.numpy.ones((1, c), bool), cache)
+        logits_all.append(np.asarray(lg[0]))
+        pos += c
+    return (np.concatenate(logits_all, 0),
+            [np.asarray(x) for x in jax.tree.leaves(cache)])
+
+
+def _assert_bitexact(name, prompt, splits):
+    n = len(prompt)
+    lg_mono, cache_mono = _run_split(name, prompt, [n])
+    lg, cache = _run_split(name, prompt, splits)
+    np.testing.assert_array_equal(
+        lg, lg_mono,
+        err_msg=f"{name}: chunk split {splits} drifted from monolithic "
+                "prefill logits")
+    for a, b in zip(cache, cache_mono):
+        np.testing.assert_array_equal(
+            a, b,
+            err_msg=f"{name}: split {splits} left different KV/state")
+
+
+class TestChunkedEqualsMonolithic:
+    @pytest.mark.parametrize("name", ARCHS)
+    def test_fixed_splits_bitexact(self, name):
+        """Deterministic anchor (no hypothesis needed): token-at-a-time,
+        even, and ragged splits all reproduce the monolithic call."""
+        rng = np.random.default_rng(0)
+        cfg = _setup(name)[0]
+        n = 13
+        prompt = rng.integers(0, cfg.vocab_size, n)
+        for splits in ([1] * n, [4, 4, 4, 1], [3, 10], [12, 1]):
+            _assert_bitexact(name, prompt, splits)
+
+    @pytest.mark.parametrize("name", ARCHS)
+    def test_random_splits_bitexact(self, name):
+        """Hypothesis property: ANY chunk split of ANY prompt is
+        bit-exact vs a single monolithic prefill call (logits and KV
+        pages), for every mixer type."""
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        cfg = _setup(name)[0]
+
+        @st.composite
+        def case(draw):
+            # n capped at 16 to bound the per-size compile set (chunk
+            # sizes 1..16 amortize across the whole hypothesis run)
+            n = draw(st.integers(1, 16))
+            prompt = draw(st.lists(
+                st.integers(0, cfg.vocab_size - 1),
+                min_size=n, max_size=n))
+            splits, left = [], n
+            while left > 0:
+                c = draw(st.integers(1, left))
+                splits.append(c)
+                left -= c
+            return np.asarray(prompt, np.int32), splits
+
+        @given(case())
+        @settings(deadline=None)   # examples come from the active profile
+        def prop(pc):
+            prompt, splits = pc
+            _assert_bitexact(name, prompt, splits)
+
+        prop()
+
+    def test_prefill_algo_does_not_change_chunk_logits(self):
+        """Replica choice (METRO vs EPLB) moves compute, not math — the
+        chunk path must keep that invariant."""
+        rng = np.random.default_rng(1)
+        cfg = _setup("mixtral-8x22b")[0]
+        prompt = rng.integers(0, cfg.vocab_size, 11)
+        lg_e, cache_e = _run_split("mixtral-8x22b", prompt, [5, 6],
+                                   algo="eplb")
+        lg_m, cache_m = _run_split("mixtral-8x22b", prompt, [5, 6],
+                                   algo="metro")
+        np.testing.assert_array_equal(lg_e, lg_m)
+        for a, b in zip(cache_e, cache_m):
+            np.testing.assert_array_equal(a, b)
+
+
+class TestAdmissionSkipAhead:
+    """Chunked prefill makes partial admission safe: `_admit` only needs
+    pages for a request's FIRST chunk, and a page-blocked request must
+    not head-of-line block admissible requests behind it."""
+
+    def _engine(self, **kw):
+        cfg, dist, params, _ = _setup("mixtral-8x22b")
+        ecfg = EngineConfig(**{
+            "max_batch": 4, "max_len": 64, "page_size": 8,
+            "prefill_chunk": 32, "rebalance_every": 0, **kw})
+        return cfg, ServingEngine(cfg, dist, params, ecfg)
+
+    def test_short_prompt_admits_past_blocked_long_prompt(self):
+        cfg, eng = self._engine(num_pages=8)
+        # occupy 6 of 8 pages so only 2 are free
+        assert eng.kvman.ensure(3, 48)
+        eng.free_slots.remove(3)
+        rng = np.random.default_rng(0)
+        rid_long = eng.submit(rng.integers(0, cfg.vocab_size, 40), 4)
+        rid_short = eng.submit(rng.integers(0, cfg.vocab_size, 10), 4)
+        admitted = eng._admit()
+        # long prompt's first chunk needs 4 pages > 2 free -> blocked;
+        # the short one (2 pages) is admitted past it
+        assert [r.rid for r in admitted] == [rid_short]
+        assert [r.rid for r in eng.queue] == [rid_long]   # order kept
+        assert rid_short in eng.active
+
+    def test_wave_mode_keeps_strict_fcfs(self):
+        """The seed's head-of-line gate is preserved for A/B: in wave
+        mode the same scenario admits nothing."""
+        cfg, eng = self._engine(num_pages=8, prefill_mode="wave")
+        assert eng.kvman.ensure(3, 48)
+        eng.free_slots.remove(3)
+        rng = np.random.default_rng(0)
+        eng.submit(rng.integers(0, cfg.vocab_size, 40), 4)
+        eng.submit(rng.integers(0, cfg.vocab_size, 10), 4)
+        assert eng._admit() == []
+        assert len(eng.queue) == 2
+
+    def test_admission_reserves_first_chunk_only(self):
+        cfg, eng = self._engine()
+        rng = np.random.default_rng(1)
+        eng.submit(rng.integers(0, cfg.vocab_size, 50), 4)
+        (r,) = eng._admit()
+        # 50-token prompt, 32-token chunk, 8-token pages: 4 pages now,
+        # the rest reserved chunk-by-chunk as prefill advances
+        assert eng.kvman.owned(r.slot) == 4
+        eng.kvman.check_consistent()

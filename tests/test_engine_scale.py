@@ -50,9 +50,13 @@ def _serve_var(cfg, eng, lengths, gens, seed=0):
 class TestPagedEquivalence:
     def test_paged_reads_bitexact_vs_dense(self):
         """Same token stream through the paged pool and the dense
-        [max_batch, max_len] cache must generate identical tokens."""
+        [max_batch, max_len] cache must generate identical tokens.
+        (Both engines pin prefill_mode="wave": the monolithic wave path
+        is the one numerical program the two layouts share — chunked
+        prefill's own equivalence is tests/test_chunked_prefill.py.)"""
         lengths = (5, 9, 3, 12, 7)
-        cfg, ep = _engine(kv_layout="paged", page_size=8)
+        cfg, ep = _engine(kv_layout="paged", page_size=8,
+                          prefill_mode="wave")
         out_p = _serve(cfg, ep, lengths)
         cfg, ed = _engine(kv_layout="dense")
         out_d = _serve(cfg, ed, lengths)
@@ -87,9 +91,11 @@ class TestPagedEquivalence:
         arch (no batch-global MoE routing) a packed mixed-length wave
         must generate exactly what one-request-at-a-time prefill does."""
         lengths = (3, 11, 6, 17)
-        cfg, e_wave = _engine("falcon-mamba-7b", batch_prefill=True)
+        cfg, e_wave = _engine("falcon-mamba-7b", batch_prefill=True,
+                              prefill_mode="wave")
         out_w = _serve(cfg, e_wave, lengths, gen=5)
-        cfg, e_one = _engine("falcon-mamba-7b", batch_prefill=False)
+        cfg, e_one = _engine("falcon-mamba-7b", batch_prefill=False,
+                             prefill_mode="wave")
         out_o = _serve(cfg, e_one, lengths, gen=5)
         assert out_w == out_o
 
@@ -115,16 +121,18 @@ class TestBucketing:
         assert e_p.slo.compile_count("decode") < e_p.decode_steps
 
     def test_fewer_compiles_than_seed_scheduler(self):
-        """The rebuilt engine (pow2 buckets + batched wave prefill +
-        paged KV) triggers strictly fewer step-function compiles than
-        the seed scheduler (fixed bucket, dense KV, one prefill call per
+        """The rebuilt engine (pow2 buckets + chunked prefill + paged
+        KV) triggers strictly fewer step-function compiles than the
+        seed scheduler (fixed bucket, dense KV, one prefill call per
         request) on a trace spanning several prompt-length classes, and
-        serves every request to completion."""
+        serves every request to completion.  Chunk calls have ONE
+        static token length, so prompt-length diversity costs the
+        chunked engine no extra signatures at all."""
         lengths = (5, 12, 25, 50, 7, 30, 11, 44)
         cfg, e_seed = _engine(bucket_mode="fixed", kv_layout="dense",
                               batch_prefill=False)
         out_seed = _serve(cfg, e_seed, lengths)
-        cfg, e_new = _engine()                  # pow2 + paged + waves
+        cfg, e_new = _engine()              # pow2 + paged + chunked/mixed
         out_new = _serve(cfg, e_new, lengths)
         assert len(out_new) == len(out_seed) == len(lengths)
         assert all(len(v) == 6 for v in out_new.values())

@@ -1,0 +1,222 @@
+"""Engine-level equivalences for chunked prefill + mixed steps.
+
+  * A fused mixed step (prefill chunk + decode in ONE call) is
+    token-for-token identical — and identical in per-call expert_hist —
+    to the pure-phase chunk-then-decode sequence it replaces, under both
+    METRO and EPLB decode routing.
+  * Preemption BETWEEN prefill chunks releases the victim's pages, is
+    counted once, and readmission recomputes to the exact logical KV
+    state of a run that was never preempted (no double-written pages).
+  * The chunked engine still serves every arch family to completion and
+    matches the dense/wave engines' completion guarantees.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import build_placement, slots_for_ratio
+from repro.models import init_lm
+from repro.serving import EngineConfig, ServingEngine
+from repro.sharding.policy import make_dist
+
+pytestmark = pytest.mark.slow
+
+
+def _engine(name="mixtral-8x22b", **kw):
+    cfg = get_config(name).reduced()
+    ep = 4
+    spd = slots_for_ratio(cfg.num_experts, ep, 1.25) if cfg.is_moe else 1
+    dist = make_dist(None, ep_size=ep, slots_per_device=spd)
+    placement = (build_placement(cfg.num_experts, ep, spd)
+                 if cfg.is_moe else None)
+    params = init_lm(cfg, jax.random.PRNGKey(0), dist,
+                     replica_expert=placement.replica_expert
+                     if placement else None)
+    ecfg = EngineConfig(**{"max_batch": 4, "max_len": 64,
+                           "rebalance_every": 0, **kw})
+    return cfg, ServingEngine(cfg, dist, params, ecfg)
+
+
+def _serve_staggered(cfg, eng, lengths, gen=6, seed=0, every=2):
+    """Submit prompts a few engine iterations apart so prefill chunks
+    overlap live decode — the co-deployed regime mixed steps target."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in lengths]
+    it = iter(prompts)
+    eng.submit(next(it), gen)
+    k = 0
+    while eng.has_work:
+        eng.step()
+        k += 1
+        if k % every == 0:
+            nxt = next(it, None)
+            if nxt is not None:
+                eng.submit(nxt, gen)
+    while True:            # drain any unsubmitted (short traces)
+        nxt = next(it, None)
+        if nxt is None:
+            break
+        eng.submit(nxt, gen)
+        eng.run()
+    return {rid: tuple(r.generated) for rid, r in eng.completed.items()}
+
+
+class TestMixedStepEquivalence:
+    @pytest.mark.parametrize("algo", ["metro", "eplb"])
+    def test_mixed_equals_pure_phase(self, algo):
+        """Fusion must be invisible: same tokens, same per-call
+        expert_hist sequence, same number of prefill chunks."""
+        lengths = (5, 30, 9, 22, 7, 15)
+        kw = dict(prefill_chunk=8, decode_algo=algo)
+        cfg, e_mix = _engine(mixed_steps=True, **kw)
+        out_mix = _serve_staggered(cfg, e_mix, lengths)
+        cfg, e_pure = _engine(mixed_steps=False, **kw)
+        out_pure = _serve_staggered(cfg, e_pure, lengths)
+        assert out_mix == out_pure
+        assert len(out_mix) == len(lengths)
+        hm, hp = e_mix.expert_hist_log, e_pure.expert_hist_log
+        assert len(hm) == len(hp)
+        for a, b in zip(hm, hp):
+            np.testing.assert_array_equal(a, b)
+        # fusion actually happened (and stalls vanished with it)
+        s = e_mix.slo.summary()
+        assert s["mixed_steps"] > 0
+        assert s["decode_stall_events"] == 0
+        assert e_pure.slo.summary()["decode_stall_events"] > 0
+
+    def test_budget_caps_prefill_tokens_per_iteration(self):
+        """mixed_prefill_budget bounds per-iteration prefill work but
+        not the final tokens (numerics are schedule-invariant)."""
+        lengths = (40, 25, 10)
+        cfg, e_all = _engine(prefill_chunk=8, mixed_prefill_budget=0)
+        out_all = _serve_staggered(cfg, e_all, lengths)
+        cfg, e_cap = _engine(prefill_chunk=8, mixed_prefill_budget=8)
+        out_cap = _serve_staggered(cfg, e_cap, lengths)
+        assert out_all == out_cap
+        assert len(out_cap) == len(lengths)
+
+    def test_mixed_serves_hybrid_and_swa(self):
+        for name in ("gemma3-12b", "jamba-1.5-large-398b"):
+            cfg, eng = _engine(name, prefill_chunk=8)
+            out = _serve_staggered(cfg, eng, (5, 20, 9), gen=4)
+            assert len(out) == 3
+            assert all(len(v) == 4 for v in out.values())
+
+
+class TestPreemptionBetweenChunks:
+    def test_preempt_mid_prefill_releases_pages_and_counts_once(self):
+        cfg, eng = _engine(prefill_chunk=8, page_size=4, num_pages=16)
+        rng = np.random.default_rng(0)
+        r0 = eng.submit(rng.integers(0, cfg.vocab_size, 6), 20)
+        eng.step()                          # r0 prefilled + first token
+        r1 = eng.submit(rng.integers(0, cfg.vocab_size, 30), 5)
+        eng.step()                          # r1's first chunk only
+        req1 = eng.active[r1]
+        assert 0 < req1.pos < req1.n_ctx    # genuinely mid-prefill
+        used_before = eng.kvman.pages_in_use
+        assert eng._preempt_one(protect_rid=r0)
+        assert eng.slo.preemptions == 1     # counted exactly once
+        assert r1 not in eng.active
+        assert eng.queue[0].rid == r1
+        assert req1.pos == 0                # recompute from scratch
+        assert eng.kvman.pages_in_use < used_before
+        eng.kvman.check_consistent()        # no double-mapped pages
+        # readmission recomputes and completes both requests
+        eng.run()
+        assert len(eng.completed) == 2
+        assert eng.kvman.pages_in_use == 0
+        eng.kvman.check_consistent()
+
+    def test_readmission_recomputes_exact_state(self):
+        """The observable for exact recompute: the preempted request's
+        logical KV pages (gathered through its page table) — and its
+        generated tokens — are bitwise identical to a run that was
+        never preempted."""
+        rng = np.random.default_rng(1)
+        prompt = rng.integers(0, get_config("mixtral-8x22b")
+                              .reduced().vocab_size, 20)
+
+        def logical_kv(eng, slot):
+            pt = eng.kvman.page_table[slot]
+            out = []
+            for li, pool in eng.cache.items():
+                if "conv" in pool:
+                    out.append(np.asarray(pool["h"][:, slot]))
+                    out.append(np.asarray(pool["conv"][:, slot]))
+                    continue
+                for key in ("k", "v"):
+                    arr = np.asarray(pool[key])     # [nb, P, ps, kv, hd]
+                    for lp in pt[pt >= 0]:          # logical page order
+                        out.append(arr[:, lp])
+            return out
+
+        def run_three_chunks(preempt):
+            cfg, eng = _engine(prefill_chunk=8, page_size=4)
+            rid = eng.submit(prompt, 4)
+            eng.step()                      # chunk 1 (pos=8)
+            if preempt:
+                assert eng._preempt_one(protect_rid=-1)
+                assert eng.slo.preemptions == 1
+                eng.kvman.check_consistent()
+                eng.step()                  # readmit + chunk 1 again
+                eng.step()                  # chunk 2
+            else:
+                eng.step()                  # chunk 2 (pos=16)
+            eng.step()                      # final chunk + first decode
+            req = (eng.active.get(rid) or eng.completed.get(rid))
+            assert req.pos == req.n_ctx + 1
+            return eng, req
+
+        e_clean, r_clean = run_three_chunks(preempt=False)
+        e_evict, r_evict = run_three_chunks(preempt=True)
+        assert r_clean.generated == r_evict.generated
+        kv_c = logical_kv(e_clean, r_clean.slot)
+        kv_e = logical_kv(e_evict, r_evict.slot)
+        assert len(kv_c) == len(kv_e)
+        for a, b in zip(kv_c, kv_e):
+            np.testing.assert_array_equal(a, b)
+        e_evict.kvman.check_consistent()
+
+    def test_natural_pressure_preempts_mid_prefill_and_completes(self):
+        """End-to-end: a tight pool repeatedly evicts the youngest
+        request — including while it is only partway through chunked
+        prefill.  Every request still finishes with its full token
+        count, the allocator invariants hold throughout, and any
+        request whose evictions all happened BETWEEN prefill chunks (or
+        that was never evicted) generates exactly the tokens of an
+        uncontended run.  (Mid-decode victims recompute correctly but
+        not bitwise — replaying prompt+generated collapses the re-fed
+        boundary token; seed semantics, see ServingEngine._preempt_one.
+        The bitwise mid-prefill claim is pinned deterministically by
+        test_readmission_recomputes_exact_state above.)"""
+        lengths, gens = (10, 12, 8, 40), (24, 20, 16, 6)
+        rng = np.random.default_rng(2)
+        cfg = get_config("mixtral-8x22b").reduced()
+        prompts = [rng.integers(0, cfg.vocab_size, n) for n in lengths]
+
+        def serve(**kw):
+            cfg2, eng = _engine(prefill_chunk=8, page_size=4, **kw)
+            for p, g in zip(prompts, gens):
+                eng.submit(p, g)
+            eng.run()
+            return eng
+
+        tight = serve(num_pages=24)         # pmax=16: under 4 full seqs
+        assert len(tight.completed) == len(lengths)
+        assert tight.slo.preemptions > 0
+        # evictions genuinely landed between prefill chunks
+        assert sum(r.preempted_in_prefill
+                   for r in tight.completed.values()) > 0
+        tight.kvman.check_consistent()
+        assert tight.kvman.pages_in_use == 0
+        roomy = serve()                     # full residency, no pressure
+        assert roomy.slo.preemptions == 0
+        exact = 0
+        for rid, r in roomy.completed.items():
+            rt = tight.completed[rid]
+            assert len(rt.generated) == len(r.generated)
+            if rt.preempted == rt.preempted_in_prefill:
+                assert rt.generated == r.generated
+                exact += 1
+        assert exact >= 1

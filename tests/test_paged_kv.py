@@ -5,7 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_decode import flash_decode_paged, flash_decode_pallas
+from repro.kernels.flash_decode import (flash_decode_paged,
+                                        flash_decode_pallas,
+                                        flash_prefill_paged)
+from repro.kernels.ref import flash_prefill_paged_ref
 from repro.serving.kv import PagedKVManager, pages_for
 
 pytestmark = pytest.mark.fast
@@ -93,6 +96,64 @@ class TestPagedKernel:
         want = flash_decode_pallas(q, k_dense, v_dense, pos, block_s=ps)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("b,kv,g,c,hd,ps,pmax,window,seed", [
+        (2, 2, 2, 4, 16, 8, 4, 0, 0),
+        (3, 1, 4, 8, 32, 16, 2, 0, 1),
+        (2, 2, 1, 6, 16, 8, 8, 12, 2),    # sliding window
+        (1, 2, 2, 1, 16, 8, 4, 0, 3),     # C=1: decode as a chunk
+    ])
+    def test_prefill_kernel_matches_oracle(self, b, kv, g, c, hd, ps,
+                                           pmax, window, seed):
+        """The chunk-offset query window kernel (multi-token queries at
+        positions start+i over the paged pool) matches the numpy oracle,
+        with holes masked and optional SWA masking."""
+        rng = np.random.default_rng(seed)
+        num_pages = b * pmax + 2
+        q = jnp.asarray(rng.normal(size=(b, kv, c, g, hd)), jnp.float32)
+        k_pool = jnp.asarray(rng.normal(size=(num_pages, ps, kv, hd)),
+                             jnp.float32)
+        v_pool = jnp.asarray(rng.normal(size=(num_pages, ps, kv, hd)),
+                             jnp.float32)
+        # each row: a chunk starting somewhere inside its sequence, with
+        # enough pages mapped to cover start+c (later tables keep holes)
+        start = rng.integers(0, pmax * ps - c, size=b).astype(np.int32)
+        pt = np.full((b, pmax), -1, np.int32)
+        free = list(rng.permutation(num_pages))
+        for i in range(b):
+            for p in range((int(start[i]) + c - 1) // ps + 1):
+                pt[i, p] = free.pop()
+        got = flash_prefill_paged(q, k_pool, v_pool,
+                                  jnp.asarray(start), jnp.asarray(pt),
+                                  window=window)
+        want = flash_prefill_paged_ref(np.asarray(q), np.asarray(k_pool),
+                                       np.asarray(v_pool), start, pt,
+                                       window=window)
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_prefill_kernel_c1_equals_decode_kernel(self):
+        """A one-token chunk is exactly a decode step: the two kernels
+        must agree on the same pool/page-table state."""
+        rng = np.random.default_rng(4)
+        b, kv, g, hd, ps, pmax = 2, 2, 2, 16, 8, 4
+        num_pages = b * pmax
+        q = jnp.asarray(rng.normal(size=(b, kv, g, hd)), jnp.float32)
+        k_pool = jnp.asarray(rng.normal(size=(num_pages, ps, kv, hd)),
+                             jnp.float32)
+        v_pool = jnp.asarray(rng.normal(size=(num_pages, ps, kv, hd)),
+                             jnp.float32)
+        pos = jnp.asarray(rng.integers(0, pmax * ps, size=b), jnp.int32)
+        pt = np.full((b, pmax), -1, np.int32)
+        free = list(rng.permutation(num_pages))
+        for i in range(b):
+            for p in range(int(pos[i]) // ps + 1):
+                pt[i, p] = free.pop()
+        pt = jnp.asarray(pt)
+        dec = flash_decode_paged(q, k_pool, v_pool, pos, pt)
+        chk = flash_prefill_paged(q[:, :, None], k_pool, v_pool, pos, pt)
+        np.testing.assert_allclose(np.asarray(chk[:, :, 0]),
+                                   np.asarray(dec), rtol=1e-6, atol=1e-6)
 
     def test_unmapped_pages_are_masked(self):
         """Holes in the page table must not leak pool contents even when

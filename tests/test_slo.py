@@ -1,0 +1,163 @@
+"""SLOTracker unit tests on hand-built timelines via an injected clock.
+
+Every derived quantity — TTFT/TPOT percentiles, the TTFT decomposition
+(queue wait / prefill span / decode wait), per-kind step and compile
+counters, and the chunk-stall attribution — must be deterministic and
+exactly computable from the event timeline, with no real wall clock in
+the loop.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import SLOTracker
+
+pytestmark = pytest.mark.fast
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _tracker():
+    clk = Clock()
+    return SLOTracker(clock=clk), clk
+
+
+class TestRequestTimeline:
+    def test_ttft_and_tpot_exact(self):
+        slo, clk = _tracker()
+        slo.arrive(0, n_prompt=10)          # t=0
+        clk.t = 1.0
+        slo.first_token(0)                  # TTFT = 1.0
+        for t in (1.5, 2.0, 2.5):
+            clk.t = t
+            slo.token(0)
+        clk.t = 2.5
+        slo.finish(0)
+        s = slo.summary()
+        assert s["requests"] == 1
+        assert s["ttft_mean"] == pytest.approx(1.0)
+        # 4 generated tokens over (2.5 - 1.0) -> TPOT = 0.5
+        assert s["tpot_mean"] == pytest.approx(0.5)
+
+    def test_percentiles_match_numpy(self):
+        slo, clk = _tracker()
+        ttfts = [0.1, 0.2, 0.4, 0.8, 1.6]
+        for rid, ttft in enumerate(ttfts):
+            clk.t = float(rid) * 10
+            slo.arrive(rid, 5)
+            clk.t = rid * 10 + ttft
+            slo.first_token(rid)
+            slo.finish(rid)
+        s = slo.summary()
+        for q in (50, 90, 99):
+            assert s[f"ttft_p{q}"] == pytest.approx(
+                np.percentile(ttfts, q))
+
+    def test_ttft_decomposition(self):
+        """queue wait + prefill span + decode wait == TTFT when the
+        engine emits every chunk-boundary event."""
+        slo, clk = _tracker()
+        slo.arrive(0, 64)                   # t=0
+        clk.t = 0.25
+        slo.admitted(0)                     # queue_wait = 0.25
+        clk.t = 0.25
+        slo.prefill_started(0)
+        for t in (0.5, 0.75, 1.0):          # three chunks
+            clk.t = t
+            slo.chunk_done(0)
+        clk.t = 1.0
+        slo.prefill_done(0)                 # prefill_span = 0.75
+        clk.t = 1.5
+        slo.first_token(0)                  # decode_wait = 0.5
+        clk.t = 2.0
+        slo.finish(0)
+        s = slo.summary()
+        assert s["ttft_queue_mean"] == pytest.approx(0.25)
+        assert s["ttft_prefill_mean"] == pytest.approx(0.75)
+        assert s["ttft_decode_wait_mean"] == pytest.approx(0.5)
+        assert (s["ttft_queue_mean"] + s["ttft_prefill_mean"]
+                + s["ttft_decode_wait_mean"]) == pytest.approx(
+                    s["ttft_mean"])
+        assert s["prefill_chunks"] == 3
+
+    def test_prefill_start_is_sticky_across_recompute(self):
+        """Readmission after preemption re-runs chunks; the FIRST
+        prefill_started timestamp must survive (TTFT is end-to-end)."""
+        slo, clk = _tracker()
+        slo.arrive(0, 8)
+        clk.t = 1.0
+        slo.prefill_started(0)
+        clk.t = 5.0
+        slo.prefill_started(0)              # recompute: ignored
+        slo.chunk_done(0)
+        clk.t = 6.0
+        slo.prefill_done(0)
+        clk.t = 6.5
+        slo.first_token(0)
+        slo.finish(0)
+        t = slo.timings[0]
+        assert t.prefill_start == pytest.approx(1.0)
+        assert t.prefill_span == pytest.approx(5.0)
+
+
+class TestCounters:
+    def test_per_kind_compiles(self):
+        slo, _ = _tracker()
+        slo.compiled("decode", 4)
+        slo.compiled("decode", 8)
+        slo.compiled("chunk", 2)
+        slo.compiled("mixed", (2, 4))
+        assert slo.compile_count("decode") == 2
+        assert slo.compile_count("chunk") == 1
+        assert slo.compile_count("mixed") == 1
+        assert slo.compile_count("prefill") == 0
+        assert slo.total_compiles == 4
+
+    def test_step_kinds_counted(self):
+        slo, clk = _tracker()
+        slo.arrive(0, 4)
+        clk.t = 1.0
+        slo.first_token(0)
+        slo.finish(0)
+        slo.step("chunk", 0.1)
+        slo.step("mixed", 0.2)
+        slo.step("mixed", 0.3)
+        slo.step("decode", 0.05)
+        s = slo.summary()
+        assert s["chunk_steps"] == 1
+        assert s["mixed_steps"] == 2
+        assert s["decode_steps"] == 1
+        assert s["mixed_step_p99_s"] == pytest.approx(
+            np.percentile([0.2, 0.3], 99))
+
+    def test_stall_attribution(self):
+        """Chunk-stall accounting: total/max/count over exactly the
+        seconds the engine reported decode rows waiting."""
+        slo, clk = _tracker()
+        slo.arrive(0, 4)
+        clk.t = 1.0
+        slo.first_token(0)
+        slo.finish(0)
+        slo.stall("chunk", 0.2)
+        slo.stall("chunk", 0.1)
+        slo.stall("prefill", 0.7)
+        s = slo.summary()
+        assert s["decode_stall_events"] == 3
+        assert s["decode_stall_total_s"] == pytest.approx(1.0)
+        assert s["decode_stall_max_s"] == pytest.approx(0.7)
+
+    def test_no_events_is_clean(self):
+        slo, clk = _tracker()
+        slo.arrive(0, 4)
+        clk.t = 1.0
+        slo.first_token(0)
+        slo.finish(0)
+        s = slo.summary()
+        assert s["decode_stall_events"] == 0
+        assert s["decode_stall_total_s"] == 0.0
+        assert s["prefill_chunks"] == 0
