@@ -7,7 +7,8 @@ The paper's contribution lives here:
   metrics.py   — activated-expert metrics + memory-bound runtime model
 """
 from repro.core.types import Placement, RoutingStats
-from repro.core.placement import build_placement, slots_for_ratio
+from repro.core.placement import (build_placement, slots_for_ratio,
+                                  aggregate_expert_loads)
 from repro.core.routing import (
     route, route_metro, route_eplb, route_single,
     metro_token_slots, topk_histogram, rank_within_expert,
@@ -20,6 +21,7 @@ from repro.core.metrics import (
 
 __all__ = [
     "Placement", "RoutingStats", "build_placement", "slots_for_ratio",
+    "aggregate_expert_loads",
     "route", "route_metro", "route_eplb", "route_single",
     "metro_token_slots", "topk_histogram", "rank_within_expert",
     "solve_min_exp_routing", "optimal_lambda",

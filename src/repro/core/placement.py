@@ -120,6 +120,26 @@ def build_placement(
     return placement
 
 
+def aggregate_expert_loads(loads: list[np.ndarray]) -> np.ndarray:
+    """Cluster-wide expert-load signal: sum the per-replica EWMAs.
+
+    Each serving replica keeps its own expert-load EWMA (updated per
+    step from the routing histograms it actually saw).  The cluster's
+    shared EPLB placement must balance the *total* load every expert
+    receives across the fleet, so the aggregation is a plain sum —
+    replicas that served more tokens weigh in proportionally, and for a
+    single replica the aggregate degenerates to that replica's own EWMA
+    (the single-replica-cluster ≡ bare-engine determinism invariant).
+    """
+    assert loads, "need at least one replica's loads"
+    out = np.zeros_like(np.asarray(loads[0], dtype=np.float64))
+    for ld in loads:
+        ld = np.asarray(ld, dtype=np.float64)
+        assert ld.shape == out.shape, (ld.shape, out.shape)
+        out += ld
+    return out
+
+
 def slots_for_ratio(num_experts: int, num_devices: int,
                     replication_ratio: float) -> int:
     """Slots per device for a target replication ratio, rounded up so the

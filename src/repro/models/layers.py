@@ -447,7 +447,8 @@ def attention_prefill_paged(cfg: ModelConfig, params, x, cache, page_table,
 
 def attention_decode_paged(cfg: ModelConfig, params, x, cache, page_table,
                            pos, *, window: Optional[int] = None, dims=None,
-                           rope: bool = True, dist=None):
+                           rope: bool = True, dist=None,
+                           use_flash: bool = False):
     """Single-token decode against a *paged* KV pool.
 
     x: [B, 1, d]; cache k/v: [P, ps, KV, hd] (the shared page pool);
@@ -461,6 +462,15 @@ def attention_decode_paged(cfg: ModelConfig, params, x, cache, page_table,
     window at read time — unlike the dense rolling buffer this keeps
     positions linear, so padded prefill garbage can never alias a live
     slot.
+
+    ``use_flash`` routes the attention reduction through the Pallas
+    ``flash_decode_paged`` kernel (page-table-driven DMA, no gathered
+    [B, Pmax*ps] view, in-register dequant for fp8 pools) instead of
+    the jnp gather reference.  The K/V *write* path is shared — only
+    the read/softmax differs, and the kernel's fp32 online softmax
+    matches the reference to accumulation-order tolerance (the
+    interpret-mode parity test).  SWA layers keep the reference read
+    (the decode kernel has no window mask yet).
     """
     b, s1, d = x.shape
     assert s1 == 1
@@ -488,6 +498,15 @@ def attention_decode_paged(cfg: ModelConfig, params, x, cache, page_table,
     vf = vf.at[flat_idx].set(v[:, 0].astype(vf.dtype), mode="drop")
     new_cache = {"k": kf.reshape(num_pages, ps, kvh, hd),
                  "v": vf.reshape(num_pages, ps, kvh, hd)}
+
+    if use_flash and not window:
+        from repro.kernels.flash_decode import flash_decode_paged
+        q4 = q.reshape(b, dims.kv, dims.group, dims.head_dim)
+        o = flash_decode_paged(
+            q4, new_cache["k"], new_cache["v"], pos, page_table,
+            interpret=jax.default_backend() != "tpu")
+        o = o.reshape(b, 1, dims.heads * dims.head_dim)
+        return o @ params["wo"], new_cache
 
     # page-table-indexed read: gather this batch's pages into a
     # [B, KV, Pmax*ps, hd] view (the Pallas paged kernel streams the

@@ -303,7 +303,8 @@ def cast_params(params, dtype=jnp.bfloat16):
 
 
 def _mixer_apply(cfg, dist, lp, mixer, x, *, mode, lc, pos, chunk,
-                 slot_idx=None, page_table=None, row_valid=None):
+                 slot_idx=None, page_table=None, row_valid=None,
+                 use_flash=False):
     """Apply attention/mamba; returns (y, new_layer_cache or {}).
 
     Decode-time serving extensions: ``slot_idx`` gathers only the active
@@ -364,7 +365,8 @@ def _mixer_apply(cfg, dist, lp, mixer, x, *, mode, lc, pos, chunk,
         if page_table is not None:
             return L.attention_decode_paged(
                 cfg, lp["attn"], x, lc, page_table, pos,
-                window=window, dims=dims, dist=dist)
+                window=window, dims=dims, dist=dist,
+                use_flash=use_flash)
         if slot_idx is not None:
             rows = {k: v[jnp.minimum(slot_idx, v.shape[0] - 1)]
                     for k, v in lc.items()}
@@ -416,7 +418,8 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
              remat: bool = False, capacity_factor: float = 1.25,
              use_pallas_route: bool = False, frames=None,
              compute_dtype=jnp.bfloat16, remat_policy: str = "dots_no_batch",
-             slot_idx=None, page_table=None, row_valid=None):
+             slot_idx=None, page_table=None, row_valid=None,
+             use_flash_kernel: bool = False):
     """Returns (logits, new_cache, stats).
 
     Serving (decode) extras: ``slot_idx`` [B] selects which cache rows
@@ -424,7 +427,10 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
     attention to paged-KV pools (cache from :func:`init_paged_cache`);
     ``row_valid`` (bool, [B] decode / [B, S] prefill) keeps padding
     tokens out of MoE routing, making routing decisions — and therefore
-    the numerics — invariant to batch-bucket and length padding.
+    the numerics — invariant to batch-bucket and length padding;
+    ``use_flash_kernel`` runs paged decode attention through the Pallas
+    ``flash_decode_paged`` kernel (full-attention layers only — SWA
+    keeps the gather reference).
 
     ``mode="chunk_prefill"``: resumable chunked prefill.  ``tokens`` is
     a [B, C] chunk, ``pos`` [B] the absolute position of each row's
@@ -469,7 +475,8 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
             y, nc = _mixer_apply(cfg, dist, lp, mixer, h, mode=mode,
                                  lc=bc.get(li), pos=pos, chunk=chunk,
                                  slot_idx=slot_idx, page_table=page_table,
-                                 row_valid=row_valid)
+                                 row_valid=row_valid,
+                                 use_flash=use_flash_kernel)
             if nc:
                 new_bc[li] = nc
             x = x + y

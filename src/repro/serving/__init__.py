@@ -1,11 +1,21 @@
-from repro.serving.engine import ServingEngine, EngineConfig, Request
+from repro.serving.engine import ServingEngine, EngineConfig
+from repro.serving.state import Request, EngineState
+from repro.serving.scheduler import Scheduler
+from repro.serving.executor import Executor
+from repro.serving.cluster import (ClusterConfig, ClusterEngine,
+                                   default_step_cost)
 from repro.serving.kv import PagedKVManager, pages_for
-from repro.serving.slo import SLOTracker
+from repro.serving.slo import (SLOTracker, VirtualClock,
+                               aggregate_cluster_summary)
 from repro.serving.traffic import (SyntheticRequest, TrafficConfig,
                                    generate_trace, replay_closed_loop,
-                                   replay_open_loop)
+                                   replay_open_loop,
+                                   spawn_traffic_configs)
 
-__all__ = ["ServingEngine", "EngineConfig", "Request", "SLOTracker",
-           "PagedKVManager", "pages_for", "TrafficConfig",
-           "SyntheticRequest", "generate_trace", "replay_open_loop",
-           "replay_closed_loop"]
+__all__ = ["ServingEngine", "EngineConfig", "Request", "EngineState",
+           "Scheduler", "Executor", "ClusterConfig", "ClusterEngine",
+           "default_step_cost", "SLOTracker", "VirtualClock",
+           "aggregate_cluster_summary", "PagedKVManager", "pages_for",
+           "TrafficConfig", "SyntheticRequest", "generate_trace",
+           "replay_open_loop", "replay_closed_loop",
+           "spawn_traffic_configs"]

@@ -1,31 +1,43 @@
-"""Continuous-batching serving engine with prefill/decode co-deployment.
+"""Continuous-batching serving engine: thin façade over the layered
+serving stack.
 
 The paper's real-system setting (§VI-A): prefill and decode co-deployed,
 EPLB expert placement/replication as the fixed substrate, token routing
 selectable per phase — METRO for the memory-bound decode phase, EPLB's
 round-robin for prefill (exactly the paper's deployment).
 
+The engine is decomposed into three layers this module only wires
+together (see serving/README.md for the full diagram):
+
+  * :mod:`repro.serving.state`      — ``Request`` + ``EngineState``:
+    admission queue, slot/page residency, expert-load EWMA.  No policy.
+  * :mod:`repro.serving.scheduler`  — ``Scheduler``: admission with
+    skip-ahead, chunk planning under the token budget, preemption,
+    pow2 bucket policy with compile grace, and the rebalance window
+    (deferred while chunked prefills are in flight).  No jax.
+  * :mod:`repro.serving.executor`   — ``Executor``: the jit cache and
+    decode/prefill/chunk/mixed step builders, input packing, the KV
+    cache pytree, and the EPLB placement + routing tables + logical
+    master weights the rebalance loop reshuffles.  No scheduling.
+
+:class:`ServingEngine` keeps the public surface of the former monolith
+(``submit`` / ``step`` / ``run``, plus ``queue`` / ``active`` /
+``completed`` / ``kvman`` / ``cache`` / ``free_slots`` delegations), so
+every PR-2 equivalence suite runs unmodified against the refactor.  One
+engine is one replica; :mod:`repro.serving.cluster` runs N of them
+behind a router with a shared EPLB placement.
+
 Engine loop per iteration (vLLM/sarathi-style):
-  1. admit waiting requests into free slots.  With chunked prefill a
-     request only needs pages for its FIRST chunk to start, so admission
-     scans past a page-blocked head request instead of head-of-line
-     blocking the whole queue (``prefill_mode="wave"`` keeps the strict
-     FCFS gate for A/B).
-  2. plan this iteration's prefill work: every prefilling row advances
-     by up to ``prefill_chunk`` tokens, capped globally by
-     ``mixed_prefill_budget`` tokens per iteration (sarathi's token
-     budget).  Chunks run against the PAGED serving cache directly —
-     attention reads already-written pages, mamba carries {conv, h}
-     state across calls — so a long prompt costs O(chunk) activations
-     instead of O(max_len) and can be preempted between chunks.
-  3. run the step: when ``mixed_steps`` and both phases have rows, ONE
-     fused call executes the prefill chunks and the decode tokens
-     together (decode no longer stalls behind prefill at all); otherwise
-     the chunk call and the bucketed decode call run back-to-back and
-     the chunk time is attributed as decode stall (``SLOTracker.stall``).
-  4. retire finished requests; every ``rebalance_every`` decode steps,
-     recompute EPLB placement from the observed expert-load EWMA and
-     reshuffle the physical expert weights.
+  1. admit waiting requests into free slots (skip-ahead past a
+     page-blocked head request under chunked prefill).
+  2. plan this iteration's prefill chunks (``prefill_chunk`` per row,
+     ``mixed_prefill_budget`` global token cap).
+  3. run the step: ONE fused mixed call when both phases have rows and
+     ``mixed_steps``; otherwise chunk call + bucketed decode call
+     back-to-back with the chunk time attributed as decode stall.
+  4. retire finished requests; when the rebalance window fires (and no
+     chunked prefill is in flight), recompute EPLB placement from the
+     observed expert-load EWMA and reshuffle the physical weights.
 
 Every equivalence is pinned bit-for-bit by the test harness:
   * any chunk split == one monolithic chunk call (logits + KV pages),
@@ -33,71 +45,34 @@ Every equivalence is pinned bit-for-bit by the test harness:
   * mixed fused step == pure-phase chunk-then-decode sequence
     (tokens + per-call expert_hist), tests/test_mixed_steps.py;
   * preempt-between-chunks + readmission == never-preempted run,
-    tests/test_mixed_steps.py.
+    tests/test_mixed_steps.py;
+  * rebalance mid-prefill == no rebalance at all (tokens + hist),
+    tests/test_cluster.py;
+  * single-replica ClusterEngine == bare ServingEngine,
+    tests/test_cluster.py.
 
-Batch-size bucketing mirrors the paper's CUDA-graph integration (§V):
-step functions are jitted once per (bucket, padded-length) signature and
-reused for every batch that rounds up to it; the ``SLOTracker`` counts
-each fresh compile.  Chunk calls have ONE static token length
-(``prefill_chunk``; short tails are masked per row), so chunked prefill
-needs O(log max_batch) compiles total vs O(log max_batch · log max_len)
-for wave prefill.
-
-KV storage is paged by default (``kv_layout="paged"``): attention layers
-share a flat pool of fixed-size pages (``serving/kv.py``), each sequence
-owns only the pages its tokens occupy, and page tables are step *inputs*
-— growing a sequence or admitting past the dense-residency limit never
-recompiles.  When the pool runs dry the engine preempts the youngest
-sequence (free its pages, requeue, recompute on readmission) — now also
-*between prefill chunks*, so a half-prefilled long prompt can yield its
-pages.  ``kv_layout="dense"`` keeps the seed's ``[max_batch, max_len]``
-buffers for A/B comparison (dense implies ``prefill_mode="wave"``), and
-``bucket_mode="fixed"`` + ``batch_prefill=False`` reproduces the seed
-scheduler exactly.
+Timing is injectable for cluster simulation: pass a
+:class:`repro.serving.slo.VirtualClock` plus a ``step_cost(kind,
+n_tokens, stats) -> seconds`` model and every step advances virtual
+time by the modeled cost (decode cost driven by ``max_activated`` — the
+paper's memory-bound quantity) instead of wall time, making
+multi-replica SLO sweeps bit-reproducible on CPU.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import build_placement
-from repro.models import lm as LM
-from repro.serving.kv import PagedKVManager, pages_for
-from repro.serving.slo import SLOTracker
+from repro.serving.executor import Executor
+from repro.serving.scheduler import Scheduler, _pow2
+from repro.serving.slo import SLOTracker, VirtualClock
+from repro.serving.state import EngineState, Request
 from repro.sharding.policy import Dist
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # [n] int32
-    max_new_tokens: int
-    generated: list = dataclasses.field(default_factory=list)
-    slot: int = -1
-    pos: int = 0                # next position to fill
-    n_ctx: int = 0              # context tokens to prefill (this admission)
-    done: bool = False
-    preempted: int = 0          # times evicted under page pressure
-    preempted_in_prefill: int = 0   # of those, evictions between chunks
-
-    def context_tokens(self) -> np.ndarray:
-        """Tokens to (re)prefill: the prompt plus anything generated
-        before a preemption (recompute-on-readmission)."""
-        if not self.generated:
-            return self.prompt
-        return np.concatenate(
-            [self.prompt, np.asarray(self.generated, np.int32)])
-
-    @property
-    def prefilling(self) -> bool:
-        return self.pos < self.n_ctx
+__all__ = ["EngineConfig", "ServingEngine", "Request"]
 
 
 @dataclasses.dataclass
@@ -108,6 +83,10 @@ class EngineConfig:
     decode_algo: str = "metro"  # the paper's technique
     prefill_algo: str = "eplb"
     rebalance_every: int = 64   # decode steps between EPLB rebalances
+    rebalance_defer_prefill: bool = True    # hold a due rebalance until
+                                # no chunked prefill is in flight
+                                # (bounded: forced after one extra
+                                # window so load can't starve it)
     load_ewma: float = 0.9
     prefill_chunk: int = 64     # tokens per prefill chunk
     greedy: bool = True
@@ -131,308 +110,242 @@ class EngineConfig:
     page_size: int = 16         # tokens per KV page
     num_pages: int = 0          # pool size; 0 -> full residency
                                 #   (max_batch * ceil(max_len/page_size))
-
-
-def _pow2(n: int) -> int:
-    return 1 << max(0, (int(n) - 1).bit_length())
+    # --- kernels ---
+    use_flash_kernel: bool = False  # paged decode attention through the
+                                    # Pallas flash_decode_paged kernel
+                                    # (full-attention layers; SWA keeps
+                                    # the gather reference)
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, dist: Dist, params,
-                 ecfg: EngineConfig, routing_table_width: int = 0):
+                 ecfg: EngineConfig, routing_table_width: int = 0,
+                 clock: Optional[VirtualClock] = None,
+                 step_cost: Optional[Callable] = None,
+                 fn_cache: Optional[dict] = None):
         assert ecfg.bucket_mode in ("pow2", "fixed"), ecfg.bucket_mode
         assert ecfg.kv_layout in ("paged", "dense"), ecfg.kv_layout
         assert ecfg.prefill_mode in ("chunked", "wave"), ecfg.prefill_mode
         self.cfg = cfg
         self.dist = dist
         self.ecfg = ecfg
-        self.params = params
-        self.slo = SLOTracker()
-        self.queue: deque[Request] = deque()
-        self.active: dict[int, Request] = {}
-        self.completed: dict[int, Request] = {}
-        self.free_slots = list(range(ecfg.max_batch))
-        self.decode_steps = 0
-        self.expert_loads = np.ones(max(cfg.num_experts, 1))
-        self.expert_hist_log: list[np.ndarray] = []
-        self._table_width = routing_table_width
-        self._next_rid = 0
+        self._vclock = clock
+        self.step_cost = step_cost
+        assert step_cost is None or clock is not None, \
+            "a step_cost model needs a VirtualClock to advance"
+        self.slo = SLOTracker(clock=clock.now if clock else None)
         # chunked prefill needs the paged pool (attention chunks resume
         # against already-written pages); dense layout keeps the seed's
         # monolithic wave path.
         self.chunked = (ecfg.prefill_mode == "chunked"
                         and ecfg.kv_layout == "paged")
-
-        if cfg.is_moe:
-            self.placement = build_placement(
-                cfg.num_experts, dist.ep_size, dist.slots_per_device,
-                loads=self.expert_loads)
-            if not self._table_width:
-                self._table_width = min(
-                    dist.num_slots - cfg.num_experts + 1, dist.ep_size * 2)
-                self._table_width = max(self._table_width,
-                                        self.placement.max_replicas)
-            self.routing = LM.build_lm_routing(cfg, self.placement,
-                                               self._table_width)
-            # logical master weights (for rebalance reshuffling)
-            self._logical = self._extract_logical(params)
-        else:
-            self.placement, self.routing = None, {}
-
-        if ecfg.kv_layout == "paged":
-            pmax = pages_for(ecfg.max_len, ecfg.page_size)
-            num_pages = ecfg.num_pages or ecfg.max_batch * pmax
-            self.kvman: Optional[PagedKVManager] = PagedKVManager(
-                num_pages=num_pages, page_size=ecfg.page_size,
-                max_pages_per_seq=pmax, max_seqs=ecfg.max_batch)
-            self.cache = LM.init_paged_cache(
-                cfg, dist, num_pages, ecfg.page_size, ecfg.max_batch)
-        else:
-            self.kvman = None
-            self.cache = LM.init_cache(cfg, dist, ecfg.max_batch,
-                                       ecfg.max_len)
-        self._fns: dict[str, dict] = {"decode": {}, "prefill": {},
-                                      "chunk": {}, "mixed": {}}
-        self._bucket_demand: dict[int, int] = {}
+        self.state = EngineState(ecfg, cfg.num_experts)
+        self.exec = Executor(cfg, dist, ecfg, params, self.slo,
+                             routing_table_width, fn_cache=fn_cache)
+        self.sched = Scheduler(ecfg, self.state, self.slo, self.chunked)
 
     # ------------------------------------------------------------------
-    # weight reshuffling (EPLB rebalance)
+    # state / executor delegation (the monolith's public surface)
     # ------------------------------------------------------------------
-    def _extract_logical(self, params):
-        """Logical expert master: replica 0 of each expert."""
-        first_slot = np.array([
-            self.placement.expert_slots[e, 0]
-            for e in range(self.cfg.num_experts)])
-        out = {}
+    @property
+    def queue(self):
+        return self.state.queue
 
-        def grab(tree, path=()):
-            for k, v in tree.items():
-                if isinstance(v, dict):
-                    grab(v, path + (k,))
-                elif k in ("w_up", "w_down") and v.ndim >= 4:
-                    out[path + (k,)] = np.asarray(v)[:, first_slot]
-        grab(params["blocks"])
-        return out
+    @property
+    def active(self):
+        return self.state.active
 
-    def rebalance(self):
-        """Recompute EPLB placement from observed loads + reshuffle."""
-        if not self.cfg.is_moe:
-            return
-        self.placement = build_placement(
-            self.cfg.num_experts, self.dist.ep_size,
-            self.dist.slots_per_device, loads=self.expert_loads)
-        self.routing = LM.build_lm_routing(self.cfg, self.placement,
-                                           self._table_width)
-        idx = self.placement.replica_expert
+    @property
+    def completed(self):
+        return self.state.completed
 
-        def put(tree, path=()):
-            for k, v in list(tree.items()):
-                if isinstance(v, dict):
-                    put(v, path + (k,))
-                elif k in ("w_up", "w_down") and v.ndim >= 4:
-                    tree[k] = jnp.asarray(self._logical[path + (k,)][:, idx])
-        put(self.params["blocks"])
+    @property
+    def free_slots(self):
+        return self.state.free_slots
 
-    # ------------------------------------------------------------------
-    # step functions (compiled once per shape signature)
-    # ------------------------------------------------------------------
-    def _get_fn(self, kind: str, key, builder):
-        fns = self._fns[kind]
-        if key not in fns:
-            fns[key] = builder()
-            self.slo.compiled(kind, key)
-        return fns[key]
+    @property
+    def kvman(self):
+        return self.state.kvman
 
-    def _decode_fn(self, bucket: int):
-        def build():
-            cfg, dist, ecfg = self.cfg, self.dist, self.ecfg
-            paged = ecfg.kv_layout == "paged"
+    @property
+    def decode_steps(self):
+        return self.state.decode_steps
 
-            @jax.jit
-            def step(params, tokens, pos, slot_idx, page_table, cache,
-                     routing):
-                logits, new_cache, stats = LM.apply_lm(
-                    cfg, dist, params, tokens=tokens, pos=pos, cache=cache,
-                    routing=routing, mode="decode", algo=ecfg.decode_algo,
-                    slot_idx=slot_idx,
-                    page_table=page_table if paged else None,
-                    row_valid=slot_idx < ecfg.max_batch)
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-                return nxt, new_cache, stats
-            return step
-        return self._get_fn("decode", bucket, build)
+    @property
+    def expert_loads(self):
+        return self.state.expert_loads
 
-    def _prefill_fn(self, batch: int, length: int):
-        def build():
-            cfg, dist, ecfg = self.cfg, self.dist, self.ecfg
-            paged = ecfg.kv_layout == "paged"
+    @property
+    def expert_hist_log(self):
+        return self.state.expert_hist_log
 
-            @jax.jit
-            def step(params, tokens, lengths, slot_idx, page_table, cache,
-                     routing):
-                wave = LM.init_wave_cache(cfg, dist, batch, length)
-                _, filled, stats = LM.apply_lm(
-                    cfg, dist, params, tokens=tokens, cache=wave,
-                    routing=routing, mode="prefill",
-                    algo=ecfg.prefill_algo, chunk=ecfg.prefill_chunk,
-                    row_valid=jnp.arange(length)[None, :]
-                    < lengths[:, None])
-                new_cache = LM.merge_wave_cache(
-                    cfg, cache, filled, slot_idx, lengths,
-                    page_table=page_table if paged else None,
-                    page_size=ecfg.page_size)
-                return new_cache, stats
-            return step
-        return self._get_fn("prefill", (batch, length), build)
+    @property
+    def _next_rid(self):
+        return self.state.next_rid
 
-    def _chunk_fn(self, batch: int):
-        """One resumable prefill chunk for ``batch`` rows: [B, C] tokens
-        written straight into the paged serving cache (no wave scratch,
-        no O(max_len) buffer — C = prefill_chunk is the only length)."""
-        def build():
-            cfg, dist, ecfg = self.cfg, self.dist, self.ecfg
-            c = ecfg.prefill_chunk
+    @property
+    def cache(self):
+        return self.exec.cache
 
-            @jax.jit
-            def step(params, tokens, start, n_tok, slot_idx, page_table,
-                     cache, routing):
-                _, new_cache, stats = LM.apply_lm(
-                    cfg, dist, params, tokens=tokens, pos=start,
-                    cache=cache, routing=routing, mode="chunk_prefill",
-                    algo=ecfg.prefill_algo, slot_idx=slot_idx,
-                    page_table=page_table,
-                    row_valid=jnp.arange(c)[None, :] < n_tok[:, None])
-                return new_cache, stats
-            return step
-        return self._get_fn("chunk", batch, build)
+    @property
+    def params(self):
+        return self.exec.params
 
-    def _mixed_fn(self, bp: int, bd: int):
-        """Fused mixed step: ``bp`` prefill-chunk rows and ``bd`` decode
-        rows in ONE jitted call — the chunk sub-graph writes its pages,
-        then the decode sub-graph runs against the updated cache, exactly
-        the pure-phase chunk-then-decode sequence (bitwise: the
-        equivalence test), but decode no longer waits for a dispatch."""
-        def build():
-            cfg, dist, ecfg = self.cfg, self.dist, self.ecfg
-            c = ecfg.prefill_chunk
+    @property
+    def routing(self):
+        return self.exec.routing
 
-            @jax.jit
-            def step(params, p_tokens, p_start, p_ntok, p_slot, p_pt,
-                     d_tokens, d_pos, d_slot, d_pt, cache, routing):
-                _, cache1, st_p = LM.apply_lm(
-                    cfg, dist, params, tokens=p_tokens, pos=p_start,
-                    cache=cache, routing=routing, mode="chunk_prefill",
-                    algo=ecfg.prefill_algo, slot_idx=p_slot,
-                    page_table=p_pt,
-                    row_valid=jnp.arange(c)[None, :] < p_ntok[:, None])
-                logits, cache2, st_d = LM.apply_lm(
-                    cfg, dist, params, tokens=d_tokens, pos=d_pos,
-                    cache=cache1, routing=routing, mode="decode",
-                    algo=ecfg.decode_algo, slot_idx=d_slot,
-                    page_table=d_pt,
-                    row_valid=d_slot < ecfg.max_batch)
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-                return nxt, cache2, st_p, st_d
-            return step
-        return self._get_fn("mixed", (bp, bd), build)
+    @property
+    def placement(self):
+        return self.exec.placement
 
-    # ------------------------------------------------------------------
-    # admission / paging
-    # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        assert len(prompt) < self.ecfg.max_len, (
-            f"prompt of {len(prompt)} tokens exceeds max_len-1="
-            f"{self.ecfg.max_len - 1}")
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new_tokens))
-        self.slo.arrive(rid, len(prompt))
-        return rid
+    @property
+    def _fns(self):
+        return self.exec._fns
 
-    def _admit(self) -> list[Request]:
-        """Admit waiting requests into free slots.
+    @property
+    def has_work(self) -> bool:
+        return self.state.has_work
 
-        Chunked prefill only needs pages for a request's FIRST chunk, so
-        a page-blocked request no longer blocks the whole queue: the
-        scan continues past it and admits any later request that fits
-        (slots stay strictly FCFS — running out of slots stops the
-        scan).  ``prefill_mode="wave"`` needs every context page up
-        front and keeps the seed's strict head-of-line gate.
-        """
-        admitted: list[Request] = []
-        if not self.queue or not self.free_slots:
-            return admitted
-        remaining: deque[Request] = deque()    # page-blocked, scanned past
-        while self.queue and self.free_slots:
-            r = self.queue.popleft()
-            n_ctx = min(len(r.context_tokens()), self.ecfg.max_len - 1)
-            first = min(n_ctx, self.ecfg.prefill_chunk) if self.chunked \
-                else n_ctx
-            if self.kvman is not None and \
-                    pages_for(first, self.ecfg.page_size) \
-                    > self.kvman.num_free:
-                remaining.append(r)
-                if not self.chunked:
-                    break               # strict FCFS: wait for pages
-                continue
-            r.slot = self.free_slots.pop()
-            r.n_ctx = n_ctx
-            r.pos = 0
-            if self.kvman is not None:
-                ok = self.kvman.ensure(r.slot, first)
-                assert ok, "admission page reservation failed"
-            self.active[r.rid] = r
-            admitted.append(r)
-            self.slo.admitted(r.rid)
-        # splice the untouched tail back (skipped requests were earlier
-        # in the queue, so relative order is preserved); O(1) when the
-        # scan never started
-        remaining.extend(self.queue)
-        self.queue = remaining
-        return admitted
+    def _admit(self):
+        return self.sched.admit()
 
     def _preempt_one(self, protect_rid: int) -> bool:
-        """Evict the youngest active request (≠ protect_rid): free its
-        pages + slot and requeue it for recompute-on-readmission.  A
-        victim caught *between prefill chunks* releases every page it
-        has written so far; readmission recomputes bitwise to the state
-        an unpreempted run would have reached (the prefill-phase
-        regression test).  A victim caught mid-DECODE replays
-        prompt+generated as context, which collapses the re-fed
-        boundary token the continued run kept at position n_ctx — its
-        continuation is correct-by-recompute but not bitwise the
-        unpreempted one (seed semantics, unchanged)."""
-        victims = [r for r in self.active.values() if r.rid != protect_rid]
-        if not victims:
-            return False
-        v = max(victims, key=lambda r: r.rid)
-        if v.prefilling:
-            v.preempted_in_prefill += 1
-        self.kvman.release(v.slot)
-        self.free_slots.append(v.slot)
-        del self.active[v.rid]
-        v.slot, v.pos, v.n_ctx, v.preempted = -1, 0, 0, v.preempted + 1
-        self.queue.appendleft(v)
-        self.slo.preemptions += 1
-        return True
+        return self.sched.preempt_one(protect_rid)
 
-    def _reserve(self, targets: list[tuple[Request, int]]):
-        """Grow each target row's page table to cover ``want`` tokens,
-        preempting the youngest other sequences under pool pressure.
-        Oldest targets reserve first; a target that was itself evicted
-        by an earlier reservation is skipped."""
-        if self.kvman is None:
+    # ------------------------------------------------------------------
+    # virtual time
+    # ------------------------------------------------------------------
+    def advance_clock_to(self, t: float):
+        """Jump an idle replica's virtual clock forward (a server that
+        sat idle until an arrival starts working at the arrival time)."""
+        if self._vclock is not None:
+            self._vclock.t = max(self._vclock.t, t)
+
+    def _charge(self, parts, wall_dt: float) -> float:
+        """Convert one engine call into seconds.  Wall time by default;
+        under a VirtualClock + step_cost model, the modeled cost of each
+        (kind, n_tokens, stats) component, with the clock advanced."""
+        if self._vclock is None or self.step_cost is None:
+            return wall_dt
+        dt = 0.0
+        for kind, n_tok, stats in parts:
+            dt += self.step_cost(kind, n_tok, {
+                k: float(np.asarray(stats.get(k, 0.0)))
+                for k in ("max_activated", "mean_activated",
+                          "max_tokens")})
+        self._vclock.advance(dt)
+        return dt
+
+    # ------------------------------------------------------------------
+    # rebalance (EPLB placement + physical weight reshuffle)
+    # ------------------------------------------------------------------
+    def rebalance(self, placement=None):
+        """Recompute EPLB placement from observed loads + reshuffle —
+        or install a cluster-shared ``placement`` as-is."""
+        self.exec.rebalance(self.state.expert_loads, placement=placement)
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               arrival: Optional[float] = None) -> int:
+        """Queue a request.  ``arrival`` back-stamps the arrival time on
+        the SLO timeline (virtual-time cluster replay submits at the
+        trace arrival, which may precede the replica's local clock)."""
+        r = self.state.new_request(prompt, max_new_tokens)
+        self.slo.arrive(r.rid, len(r.prompt), at=arrival)
+        return r.rid
+
+    # ------------------------------------------------------------------
+    # engine iteration
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine iteration."""
+        self.slo.queue_depth(len(self.state.queue))
+        admitted = self.sched.admit()
+        if not self.chunked:
+            # seed scheduler: monolithic wave prefill, then decode all
+            if admitted:
+                self._prefill_wave(admitted)
+            self.sched.reserve(
+                [(r, min(r.pos + 1, self.ecfg.max_len))
+                 for r in self.state.active.values()])
+            self._decode_rows(sorted(self.state.active.values(),
+                                     key=lambda r: r.slot))
             return
-        for r, want in sorted(targets, key=lambda t: t[0].rid):
-            if r.rid not in self.active:
-                continue
-            want = min(want, self.ecfg.max_len)
-            while not self.kvman.ensure(r.slot, want):
-                if not self._preempt_one(protect_rid=r.rid):
-                    raise RuntimeError(
-                        "KV page pool exhausted by a single sequence; "
-                        "num_pages must be >= ceil(max_len/page_size)")
+        self._step_chunked()
+
+    def _step_chunked(self):
+        st = self.state
+        pwork = self.sched.plan_chunks()
+        # decode set: rows already decoding, plus rows whose prefill
+        # completes with this iteration's chunk (they re-feed their last
+        # context token at position n_ctx, same as the wave scheduler)
+        finishing = {r.rid for r, n in pwork if r.pos + n >= r.n_ctx}
+        targets = [(r, r.pos + n + (1 if r.rid in finishing else 0))
+                   for r, n in pwork]
+        targets += [(r, r.pos + 1) for r in st.active.values()
+                    if not r.prefilling]
+        self.sched.reserve(targets)    # may preempt scheduled rows: filter
+        pwork = [(r, n) for r, n in pwork if r.rid in st.active]
+        finishing = {r.rid for r, n in pwork if r.pos + n >= r.n_ctx}
+        drows = [r for r in st.active.values()
+                 if not r.prefilling or r.rid in finishing]
+        drows.sort(key=lambda r: r.slot)
+
+        if pwork and drows and self.ecfg.mixed_steps:
+            self._mixed_step(pwork, drows)
+            return
+        if pwork:
+            bp = _pow2(len(pwork))
+            self._start_chunks(pwork)
+            stats, wall = self.exec.run_chunk(pwork, bp, st.kvman)
+            dt = self._charge(
+                [("chunk", sum(n for _, n in pwork), stats)], wall)
+            self.slo.step("chunk", dt)
+            if any(r.rid not in finishing for r in drows):
+                # pure-phase mode: PRE-EXISTING decode rows sat out the
+                # chunk call (rows finishing prefill in this very call
+                # were not waiting on anything)
+                self.slo.stall("chunk", dt)
+            self._update_loads(stats)
+            self._finish_chunks(pwork)
+        self._decode_rows(drows)
+
+    def _mixed_step(self, pwork: list[tuple[Request, int]],
+                    drows: list[Request]):
+        """Sarathi-style piggybacked iteration: ONE call runs the chunk
+        tokens and the decode tokens, so decode rows never stall behind
+        prefill (no ``slo.stall`` is recorded — there is nothing to
+        wait for)."""
+        bp = _pow2(len(pwork))
+        bd = self.sched.bucket(len(drows),
+                               self.exec.compiled_buckets("decode"))
+        self._start_chunks(pwork)
+        nxt, st_p, st_d, wall = self.exec.run_mixed(
+            pwork, drows, bp, bd, self.state.kvman)
+        dt = self._charge(
+            [("chunk", sum(n for _, n in pwork), st_p),
+             ("decode", len(drows), st_d)], wall)
+        self.slo.step("mixed", dt)
+        # same update order as the pure-phase sequence it replaces
+        self._update_loads(st_p)
+        self._update_loads(st_d)
+        self._finish_chunks(pwork)
+        self._postprocess_decode(drows, nxt)
+
+    def _decode_rows(self, drows: list[Request]):
+        if not drows:
+            return
+        b = self.sched.bucket(len(drows),
+                              self.exec.compiled_buckets("decode"))
+        nxt, stats, wall = self.exec.run_decode(drows, b,
+                                                self.state.kvman)
+        dt = self._charge([("decode", len(drows), stats)], wall)
+        self.slo.step("decode", dt)
+        self._update_loads(stats)
+        self._postprocess_decode(drows, nxt)
 
     # ------------------------------------------------------------------
     # prefill — monolithic wave path (prefill_mode="wave" / dense KV)
@@ -444,34 +357,15 @@ class ServingEngine:
             self._prefill_group(wave[i:i + group_cap])
 
     def _prefill_group(self, group: list[Request]):
-        ecfg = self.ecfg
-        ctxs = [r.context_tokens() for r in group]
-        lens = [min(len(c), ecfg.max_len - 1) for c in ctxs]
-        b = _pow2(len(group))
-        l_pad = min(max(_pow2(max(lens)), 8), ecfg.max_len)
-        pmax = pages_for(ecfg.max_len, ecfg.page_size)
-        toks = np.zeros((b, l_pad), np.int32)
-        lengths = np.zeros((b,), np.int32)
-        slot_idx = np.full((b,), ecfg.max_batch, np.int32)  # OOB = pad row
-        pt = np.full((b, pmax), -1, np.int32)
-        for i, r in enumerate(group):
-            toks[i, :lens[i]] = ctxs[i][:lens[i]]
-            lengths[i] = lens[i]
-            slot_idx[i] = r.slot
+        lens = [min(len(r.context_tokens()), self.ecfg.max_len - 1)
+                for r in group]
+        for r in group:
             self.slo.prefill_started(r.rid)
-        if self.kvman is not None:
-            pt[:len(group)] = self.kvman.rows([r.slot for r in group])
-        fn = self._prefill_fn(b, l_pad)
-        t0 = time.perf_counter()
-        self.cache, stats = fn(
-            self.params, jnp.asarray(toks), jnp.asarray(lengths),
-            jnp.asarray(slot_idx), jnp.asarray(pt), self.cache,
-            self.routing)
-        jax.block_until_ready(stats)
-        dt = time.perf_counter() - t0
+        stats, wall = self.exec.run_wave(group, lens, self.state.kvman)
+        dt = self._charge([("prefill", sum(lens), stats)], wall)
         self.slo.step("prefill", dt)
         gids = {r.rid for r in group}
-        if any(not r.prefilling for r in self.active.values()
+        if any(not r.prefilling for r in self.state.active.values()
                if r.rid not in gids):
             self.slo.stall("prefill", dt)
         for r, n in zip(group, lens):
@@ -481,70 +375,8 @@ class ServingEngine:
         self._update_loads(stats)
 
     # ------------------------------------------------------------------
-    # prefill — resumable chunked path (the default)
+    # chunk bookkeeping
     # ------------------------------------------------------------------
-    def _plan_chunks(self) -> list[tuple[Request, int]]:
-        """Pick this iteration's prefill work: each prefilling row gets
-        up to one ``prefill_chunk`` of its remaining context, FCFS by
-        rid, capped globally by ``mixed_prefill_budget`` tokens (0 = no
-        cap).  Partial chunks are free — the chunk call has one static
-        shape and masks per-row tails."""
-        budget = self.ecfg.mixed_prefill_budget or None
-        work: list[tuple[Request, int]] = []
-        for r in sorted(self.active.values(), key=lambda r: r.rid):
-            if not r.prefilling:
-                continue
-            n = min(r.n_ctx - r.pos, self.ecfg.prefill_chunk)
-            if budget is not None:
-                n = min(n, budget)
-                if n <= 0:
-                    break
-                budget -= n
-            work.append((r, n))
-        return work
-
-    def _chunk_inputs(self, pwork: list[tuple[Request, int]], b: int):
-        ecfg = self.ecfg
-        c = ecfg.prefill_chunk
-        pmax = pages_for(ecfg.max_len, ecfg.page_size)
-        toks = np.zeros((b, c), np.int32)
-        start = np.zeros((b,), np.int32)
-        n_tok = np.zeros((b,), np.int32)
-        slot_idx = np.full((b,), ecfg.max_batch, np.int32)
-        pt = np.full((b, pmax), -1, np.int32)
-        for i, (r, n) in enumerate(pwork):
-            ctx = r.context_tokens()
-            toks[i, :n] = ctx[r.pos:r.pos + n]
-            start[i] = r.pos
-            n_tok[i] = n
-            slot_idx[i] = r.slot
-        pt[:len(pwork)] = self.kvman.rows([r.slot for r, _ in pwork])
-        return (jnp.asarray(toks), jnp.asarray(start), jnp.asarray(n_tok),
-                jnp.asarray(slot_idx), jnp.asarray(pt))
-
-    def _decode_inputs(self, drows: list[Request], b: int):
-        ecfg = self.ecfg
-        pmax = pages_for(ecfg.max_len, ecfg.page_size)
-        tokens = np.zeros((b, 1), np.int32)
-        pos = np.zeros((b,), np.int32)
-        slot_idx = np.full((b,), ecfg.max_batch, np.int32)
-        pt = np.full((b, pmax), -1, np.int32)
-        for i, r in enumerate(drows):
-            tokens[i, 0] = (r.generated[-1] if r.generated
-                            else int(r.context_tokens()[-1]))
-            # a row finishing its prefill THIS iteration decodes at
-            # n_ctx (its r.pos advances when the chunk completes); an
-            # already-decoding row is simply at r.pos.  (n_ctx +
-            # len(generated) would be wrong after a mid-decode
-            # preemption: the re-prefilled n_ctx already contains the
-            # generated tokens.)
-            pos[i] = r.n_ctx if r.prefilling else r.pos
-            slot_idx[i] = r.slot
-        if self.kvman is not None:
-            pt[:len(drows)] = self.kvman.rows([r.slot for r in drows])
-        return (jnp.asarray(tokens), jnp.asarray(pos),
-                jnp.asarray(slot_idx), jnp.asarray(pt))
-
     def _start_chunks(self, pwork: list[tuple[Request, int]]):
         """Stamp prefill_start BEFORE the chunk-carrying call is issued
         (the wave path does the same), so the first chunk's time lands
@@ -571,165 +403,20 @@ class ServingEngine:
             r.pos += 1
             if (len(r.generated) >= r.max_new_tokens
                     or r.pos >= self.ecfg.max_len - 1):
-                r.done = True
                 self.slo.finish(r.rid)
-                self.free_slots.append(r.slot)
-                if self.kvman is not None:
-                    self.kvman.release(r.slot)
-                self.completed[r.rid] = r
-                del self.active[r.rid]
-        self.decode_steps += 1
-        if (self.cfg.is_moe and self.ecfg.rebalance_every
-                and self.decode_steps % self.ecfg.rebalance_every == 0):
+                self.state.retire(r)
+        self.state.decode_steps += 1
+        if self.cfg.is_moe and self.sched.rebalance_due():
             self.rebalance()
-
-    # per-call expert_hist log (equivalence tests); bounded so a
-    # long-running engine doesn't grow it without limit
-    _HIST_LOG_CAP = 8192
 
     def _update_loads(self, stats):
         if not self.cfg.is_moe:
             return
         h = np.asarray(stats["expert_hist"])
         if h.shape[0] == self.cfg.num_experts:
-            self.expert_hist_log.append(h)
-            if len(self.expert_hist_log) > self._HIST_LOG_CAP:
-                del self.expert_hist_log[:self._HIST_LOG_CAP // 2]
-            a = self.ecfg.load_ewma
-            self.expert_loads = a * self.expert_loads + (1 - a) * (h + 1e-3)
+            self.state.record_hist(h, self.ecfg.load_ewma)
 
     # ------------------------------------------------------------------
-    # decode (bucketed)
-    # ------------------------------------------------------------------
-    def _bucket(self, n: int) -> int:
-        """Decode batch bucket for n active sequences.
-
-        Power-of-two rounding, with a compile-avoidance grace: a bucket
-        nobody has compiled yet first borrows the smallest compiled
-        bucket above it (correct — extra rows are padding) and only
-        earns its own compile after ``bucket_compile_grace`` uses.  This
-        keeps end-of-trace drain-down from compiling each small bucket
-        for a handful of steps, while sustained low occupancy (a long
-        low-rate phase, a straggler tail) still gets its fast bucket.
-        """
-        if self.ecfg.bucket_mode == "fixed":
-            return self.ecfg.max_batch
-        b = min(_pow2(max(n, 1)), self.ecfg.max_batch)
-        fns = self._fns["decode"]
-        if b in fns:
-            return b
-        bigger = [k for k in fns if k > b]
-        if not bigger:
-            return b
-        self._bucket_demand[b] = self._bucket_demand.get(b, 0) + 1
-        if self._bucket_demand[b] > self.ecfg.bucket_compile_grace:
-            return b
-        return min(bigger)
-
-    def _decode_rows(self, drows: list[Request]):
-        if not drows:
-            return
-        n = len(drows)
-        b = self._bucket(n)
-        tokens, pos, slot_idx, pt = self._decode_inputs(drows, b)
-        fn = self._decode_fn(b)
-        t0 = time.perf_counter()
-        nxt, self.cache, stats = fn(
-            self.params, tokens, pos, slot_idx, pt, self.cache,
-            self.routing)
-        nxt = np.asarray(nxt)
-        self.slo.step("decode", time.perf_counter() - t0)
-        self._update_loads(stats)
-        self._postprocess_decode(drows, nxt)
-
-    # ------------------------------------------------------------------
-    @property
-    def has_work(self) -> bool:
-        return bool(self.queue or self.active)
-
-    def step(self):
-        """One engine iteration."""
-        self.slo.queue_depth(len(self.queue))
-        admitted = self._admit()
-        if not self.chunked:
-            # seed scheduler: monolithic wave prefill, then decode all
-            if admitted:
-                self._prefill_wave(admitted)
-            self._reserve([(r, min(r.pos + 1, self.ecfg.max_len))
-                           for r in self.active.values()])
-            self._decode_rows(sorted(self.active.values(),
-                                     key=lambda r: r.slot))
-            return
-        self._step_chunked()
-
-    def _step_chunked(self):
-        ecfg = self.ecfg
-        pwork = self._plan_chunks()
-        # decode set: rows already decoding, plus rows whose prefill
-        # completes with this iteration's chunk (they re-feed their last
-        # context token at position n_ctx, same as the wave scheduler)
-        finishing = {r.rid for r, n in pwork if r.pos + n >= r.n_ctx}
-        targets = [(r, r.pos + n + (1 if r.rid in finishing else 0))
-                   for r, n in pwork]
-        targets += [(r, r.pos + 1) for r in self.active.values()
-                    if not r.prefilling]
-        self._reserve(targets)     # may preempt scheduled rows: filter
-        pwork = [(r, n) for r, n in pwork if r.rid in self.active]
-        finishing = {r.rid for r, n in pwork if r.pos + n >= r.n_ctx}
-        drows = [r for r in self.active.values()
-                 if not r.prefilling or r.rid in finishing]
-        drows.sort(key=lambda r: r.slot)
-
-        if pwork and drows and ecfg.mixed_steps:
-            self._mixed_step(pwork, drows)
-            return
-        if pwork:
-            bp = _pow2(len(pwork))
-            self._start_chunks(pwork)
-            toks, start, n_tok, slot_idx, pt = self._chunk_inputs(pwork, bp)
-            fn = self._chunk_fn(bp)
-            t0 = time.perf_counter()
-            self.cache, stats = fn(self.params, toks, start, n_tok,
-                                   slot_idx, pt, self.cache, self.routing)
-            jax.block_until_ready(stats)
-            dt = time.perf_counter() - t0
-            self.slo.step("chunk", dt)
-            if any(r.rid not in finishing for r in drows):
-                # pure-phase mode: PRE-EXISTING decode rows sat out the
-                # chunk call (rows finishing prefill in this very call
-                # were not waiting on anything)
-                self.slo.stall("chunk", dt)
-            self._update_loads(stats)
-            self._finish_chunks(pwork)
-        self._decode_rows(drows)
-
-    def _mixed_step(self, pwork: list[tuple[Request, int]],
-                    drows: list[Request]):
-        """Sarathi-style piggybacked iteration: ONE call runs the chunk
-        tokens and the decode tokens, so decode rows never stall behind
-        prefill (no ``slo.stall`` is recorded — there is nothing to
-        wait for)."""
-        bp = _pow2(len(pwork))
-        bd = self._bucket(len(drows))
-        self._start_chunks(pwork)
-        p_toks, p_start, p_ntok, p_slot, p_pt = \
-            self._chunk_inputs(pwork, bp)
-        # decode inputs are computed AFTER the chunk advances each
-        # finishing row, so build them from the planned post-chunk state
-        d_toks, d_pos, d_slot, d_pt = self._decode_inputs(drows, bd)
-        fn = self._mixed_fn(bp, bd)
-        t0 = time.perf_counter()
-        nxt, self.cache, st_p, st_d = fn(
-            self.params, p_toks, p_start, p_ntok, p_slot, p_pt,
-            d_toks, d_pos, d_slot, d_pt, self.cache, self.routing)
-        nxt = np.asarray(nxt)
-        self.slo.step("mixed", time.perf_counter() - t0)
-        # same update order as the pure-phase sequence it replaces
-        self._update_loads(st_p)
-        self._update_loads(st_d)
-        self._finish_chunks(pwork)
-        self._postprocess_decode(drows, nxt)
-
     def run(self, max_iters: int = 10_000):
         """Run until queue + active drain (or max_iters)."""
         it = 0

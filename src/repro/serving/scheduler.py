@@ -1,0 +1,193 @@
+"""Scheduling policy: admission, chunk planning, preemption, bucketing,
+and the rebalance window.
+
+Pure host-side decisions over :class:`repro.serving.state.EngineState`
+— no jax, no device work.  The engine façade asks the scheduler *what*
+to run each iteration and hands the chosen rows to the executor; this
+separation is what lets the cluster layer drive many engines with
+different placement policies without touching the jit path.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+from repro.serving.kv import pages_for
+from repro.serving.state import EngineState, Request
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, (int(n) - 1).bit_length())
+
+
+class Scheduler:
+    def __init__(self, ecfg, state: EngineState, slo, chunked: bool):
+        self.ecfg = ecfg
+        self.state = state
+        self.slo = slo
+        self.chunked = chunked
+        self._bucket_demand: dict[int, int] = {}
+        self._rebalance_pending = False
+        self._rebalance_pending_since = 0
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def admit(self) -> list[Request]:
+        """Admit waiting requests into free slots.
+
+        Chunked prefill only needs pages for a request's FIRST chunk, so
+        a page-blocked request no longer blocks the whole queue: the
+        scan continues past it and admits any later request that fits
+        (slots stay strictly FCFS — running out of slots stops the
+        scan).  ``prefill_mode="wave"`` needs every context page up
+        front and keeps the seed's strict head-of-line gate.
+        """
+        st, ecfg = self.state, self.ecfg
+        admitted: list[Request] = []
+        if not st.queue or not st.free_slots:
+            return admitted
+        remaining: deque[Request] = deque()    # page-blocked, scanned past
+        while st.queue and st.free_slots:
+            r = st.queue.popleft()
+            n_ctx = min(len(r.context_tokens()), ecfg.max_len - 1)
+            first = min(n_ctx, ecfg.prefill_chunk) if self.chunked \
+                else n_ctx
+            if st.kvman is not None and \
+                    pages_for(first, ecfg.page_size) > st.kvman.num_free:
+                remaining.append(r)
+                if not self.chunked:
+                    break               # strict FCFS: wait for pages
+                continue
+            st.activate(r, n_ctx, first)
+            admitted.append(r)
+            self.slo.admitted(r.rid)
+        # splice the untouched tail back (skipped requests were earlier
+        # in the queue, so relative order is preserved); O(1) when the
+        # scan never started
+        remaining.extend(st.queue)
+        st.queue = remaining
+        return admitted
+
+    # ------------------------------------------------------------------
+    # preemption / page reservation
+    # ------------------------------------------------------------------
+    def preempt_one(self, protect_rid: int) -> bool:
+        """Evict the youngest active request (≠ protect_rid): free its
+        pages + slot and requeue it for recompute-on-readmission.  A
+        victim caught *between prefill chunks* releases every page it
+        has written so far; readmission recomputes bitwise to the state
+        an unpreempted run would have reached (the prefill-phase
+        regression test).  A victim caught mid-DECODE replays
+        prompt+generated as context, which collapses the re-fed
+        boundary token the continued run kept at position n_ctx — its
+        continuation is correct-by-recompute but not bitwise the
+        unpreempted one (seed semantics, unchanged)."""
+        st = self.state
+        victims = [r for r in st.active.values() if r.rid != protect_rid]
+        if not victims:
+            return False
+        v = max(victims, key=lambda r: r.rid)
+        st.evict(v)
+        self.slo.preemptions += 1
+        return True
+
+    def reserve(self, targets: list[tuple[Request, int]]):
+        """Grow each target row's page table to cover ``want`` tokens,
+        preempting the youngest other sequences under pool pressure.
+        Oldest targets reserve first; a target that was itself evicted
+        by an earlier reservation is skipped."""
+        st = self.state
+        if st.kvman is None:
+            return
+        for r, want in sorted(targets, key=lambda t: t[0].rid):
+            if r.rid not in st.active:
+                continue
+            want = min(want, self.ecfg.max_len)
+            while not st.kvman.ensure(r.slot, want):
+                if not self.preempt_one(protect_rid=r.rid):
+                    raise RuntimeError(
+                        "KV page pool exhausted by a single sequence; "
+                        "num_pages must be >= ceil(max_len/page_size)")
+
+    # ------------------------------------------------------------------
+    # prefill chunk planning
+    # ------------------------------------------------------------------
+    def plan_chunks(self) -> list[tuple[Request, int]]:
+        """Pick this iteration's prefill work: each prefilling row gets
+        up to one ``prefill_chunk`` of its remaining context, FCFS by
+        rid, capped globally by ``mixed_prefill_budget`` tokens (0 = no
+        cap).  Partial chunks are free — the chunk call has one static
+        shape and masks per-row tails."""
+        budget = self.ecfg.mixed_prefill_budget or None
+        work: list[tuple[Request, int]] = []
+        for r in sorted(self.state.active.values(), key=lambda r: r.rid):
+            if not r.prefilling:
+                continue
+            n = min(r.n_ctx - r.pos, self.ecfg.prefill_chunk)
+            if budget is not None:
+                n = min(n, budget)
+                if n <= 0:
+                    break
+                budget -= n
+            work.append((r, n))
+        return work
+
+    # ------------------------------------------------------------------
+    # decode batch bucketing
+    # ------------------------------------------------------------------
+    def bucket(self, n: int, compiled) -> int:
+        """Decode batch bucket for n active sequences.
+
+        Power-of-two rounding, with a compile-avoidance grace: a bucket
+        nobody has compiled yet first borrows the smallest compiled
+        bucket above it (correct — extra rows are padding) and only
+        earns its own compile after ``bucket_compile_grace`` uses.  This
+        keeps end-of-trace drain-down from compiling each small bucket
+        for a handful of steps, while sustained low occupancy (a long
+        low-rate phase, a straggler tail) still gets its fast bucket.
+        ``compiled`` is the executor's set of already-built decode
+        buckets.
+        """
+        if self.ecfg.bucket_mode == "fixed":
+            return self.ecfg.max_batch
+        b = min(_pow2(max(n, 1)), self.ecfg.max_batch)
+        if b in compiled:
+            return b
+        bigger = [k for k in compiled if k > b]
+        if not bigger:
+            return b
+        self._bucket_demand[b] = self._bucket_demand.get(b, 0) + 1
+        if self._bucket_demand[b] > self.ecfg.bucket_compile_grace:
+            return b
+        return min(bigger)
+
+    # ------------------------------------------------------------------
+    # rebalance window
+    # ------------------------------------------------------------------
+    def rebalance_due(self) -> bool:
+        """One local EPLB rebalance per ``rebalance_every`` decode
+        steps.  With ``rebalance_defer_prefill`` (default) a window
+        that lands while any chunked prefill is in flight stays pending
+        until prefills drain: reshuffling the physical expert weights
+        mid-prompt is *bitwise safe* (every replica of an expert holds
+        identical weights — pinned by the mid-prefill rebalance
+        regression test), but deferring keeps the reshuffle's weight
+        copies out of a prompt's chunk-to-chunk critical path.  The
+        deferral is bounded by one extra window: under sustained load
+        prefills are almost always in flight, and an unbounded guard
+        would starve rebalancing entirely."""
+        ecfg, st = self.ecfg, self.state
+        every = ecfg.rebalance_every
+        if not every:
+            return False
+        if st.decode_steps % every == 0 and not self._rebalance_pending:
+            self._rebalance_pending = True
+            self._rebalance_pending_since = st.decode_steps
+        if not self._rebalance_pending:
+            return False
+        if (ecfg.rebalance_defer_prefill and st.prefills_in_flight()
+                and st.decode_steps - self._rebalance_pending_since
+                < every):
+            return False
+        self._rebalance_pending = False
+        return True

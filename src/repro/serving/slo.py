@@ -23,6 +23,13 @@ Chunked prefill adds two attributions:
 All timestamps come from an injectable ``clock`` (defaults to
 ``time.perf_counter``), so every derived metric is unit-testable on
 hand-built timelines (tests/test_slo.py).
+
+Cluster additions: :class:`VirtualClock` is the injectable clock the
+multi-replica simulation advances by a modeled per-step cost (making
+SLO sweeps bit-reproducible on CPU), and
+:func:`aggregate_cluster_summary` pools many replicas' trackers into
+one cluster-level rollup (pooled TTFT/TPOT percentiles + per-replica
+breakdown) — the quantity the Pareto-at-SLO harness binary-searches.
 """
 from __future__ import annotations
 
@@ -77,6 +84,23 @@ def _pct(a: np.ndarray, q: float) -> float:
     return float(np.percentile(a, q)) if len(a) else 0.0
 
 
+class VirtualClock:
+    """A clock the caller advances explicitly.  Inject ``clock=vc.now``
+    into :class:`SLOTracker` (and hand ``vc`` to the engine) and every
+    latency metric becomes a deterministic function of the modeled step
+    costs instead of host wall time."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = t0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        assert dt >= 0.0, dt
+        self.t += dt
+
+
 class SLOTracker:
     def __init__(self, clock=None):
         self._clock = clock or time.perf_counter
@@ -91,9 +115,13 @@ class SLOTracker:
     def now(self) -> float:
         return self._clock() - self._t0
 
-    def arrive(self, rid: int, n_prompt: int):
-        self.timings[rid] = RequestTiming(arrival=self.now(),
-                                          n_prompt=n_prompt)
+    def arrive(self, rid: int, n_prompt: int, at: float = None):
+        """Record a request arrival, by default at ``now()``.  ``at``
+        back-stamps a trace arrival time: in cluster replay a request
+        reaches its replica when the router processes it, which may be
+        after the trace arrival the SLO clock must measure from."""
+        self.timings[rid] = RequestTiming(
+            arrival=self.now() if at is None else at, n_prompt=n_prompt)
 
     def admitted(self, rid: int):
         # TTFT decomposition events freeze once the first token is out:
@@ -221,3 +249,47 @@ class SLOTracker:
             "queue_depth_mean": float(qd.mean()) if len(qd) else 0.0,
             "queue_depth_max": int(qd.max()) if len(qd) else 0,
         }
+
+
+# ----------------------------------------------------------------------
+# cluster rollups
+# ----------------------------------------------------------------------
+
+
+def aggregate_cluster_summary(trackers: list[SLOTracker]) -> dict:
+    """Pool N replicas' trackers into one cluster-level summary.
+
+    Request latencies (TTFT/TPOT) are pooled across replicas before
+    taking percentiles — the cluster SLO is over *all* requests, not an
+    average of per-replica percentiles.  Replica timelines are
+    comparable because every replica's clock starts at the same trace
+    origin (t=0 under a VirtualClock).  Also returns the per-replica
+    summaries under ``"replicas"`` for imbalance diagnosis.
+    """
+    per = [t.summary() for t in trackers]
+    done = [tm for t in trackers for tm in t.timings.values()
+            if tm.finished > 0]
+    if not done:
+        return {"requests": 0, "replicas": per}
+    ttfts = np.array([tm.ttft for tm in done])
+    tpots = np.array([tm.tpot for tm in done if tm.n_generated > 1])
+    total_tokens = sum(tm.n_prompt + tm.n_generated for tm in done)
+    wall = max(tm.finished for tm in done) - \
+        min(tm.arrival for tm in done)
+    out = {
+        "requests": len(done),
+        "ttft_p50": _pct(ttfts, 50),
+        "ttft_p90": _pct(ttfts, 90),
+        "ttft_p99": _pct(ttfts, 99),
+        "tpot_mean": float(tpots.mean()) if len(tpots) else 0.0,
+        "tpot_p50": _pct(tpots, 50),
+        "tpot_p90": _pct(tpots, 90),
+        "tpot_p99": _pct(tpots, 99),
+        "total_token_throughput": total_tokens / max(wall, 1e-9),
+        "total_compiles": sum(s.get("total_compiles", 0) for s in per),
+        "preemptions": sum(s.get("preemptions", 0) for s in per),
+        "decode_steps": sum(s.get("decode_steps", 0) for s in per),
+        "requests_per_replica": [s.get("requests", 0) for s in per],
+        "replicas": per,
+    }
+    return out

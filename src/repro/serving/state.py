@@ -1,0 +1,147 @@
+"""Serving-engine state: requests, slot/page residency, admission queue.
+
+This is the bottom layer of the serving stack (state -> scheduler ->
+executor -> engine façade -> cluster): pure host-side bookkeeping with
+no policy and no jax.  The scheduler decides *what* to admit, preempt
+or run; the :class:`EngineState` records *who* holds which slot and
+which KV pages, which requests are waiting / active / completed, and
+the expert-load EWMA that drives EPLB rebalancing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.kv import PagedKVManager, pages_for
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [n] int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    pos: int = 0                # next position to fill
+    n_ctx: int = 0              # context tokens to prefill (this admission)
+    done: bool = False
+    preempted: int = 0          # times evicted under page pressure
+    preempted_in_prefill: int = 0   # of those, evictions between chunks
+
+    def context_tokens(self) -> np.ndarray:
+        """Tokens to (re)prefill: the prompt plus anything generated
+        before a preemption (recompute-on-readmission)."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
+
+    @property
+    def prefilling(self) -> bool:
+        return self.pos < self.n_ctx
+
+    def remaining_tokens(self) -> int:
+        """Outstanding work estimate: context still to prefill plus
+        tokens still to generate (the router's load unit)."""
+        return max(self.n_ctx - self.pos, 0) + \
+            max(self.max_new_tokens - len(self.generated), 0)
+
+
+class EngineState:
+    """Mutable serving state shared by scheduler and engine façade."""
+
+    # per-call expert_hist log (equivalence tests); bounded so a
+    # long-running engine doesn't grow it without limit
+    HIST_LOG_CAP = 8192
+
+    def __init__(self, ecfg, num_experts: int):
+        self.ecfg = ecfg
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}
+        self.completed: dict[int, Request] = {}
+        self.free_slots = list(range(ecfg.max_batch))
+        self.next_rid = 0
+        self.decode_steps = 0
+        self.expert_loads = np.ones(max(num_experts, 1))
+        self.expert_hist_log: list[np.ndarray] = []
+        if ecfg.kv_layout == "paged":
+            pmax = pages_for(ecfg.max_len, ecfg.page_size)
+            num_pages = ecfg.num_pages or ecfg.max_batch * pmax
+            self.kvman: Optional[PagedKVManager] = PagedKVManager(
+                num_pages=num_pages, page_size=ecfg.page_size,
+                max_pages_per_seq=pmax, max_seqs=ecfg.max_batch)
+        else:
+            self.kvman = None
+
+    # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    def prefills_in_flight(self) -> int:
+        """Active requests whose chunked prefill has not finished."""
+        return sum(1 for r in self.active.values() if r.prefilling)
+
+    def outstanding_tokens(self) -> int:
+        """Total outstanding work (queued + active), the quantity the
+        cluster's least-outstanding-work dispatch balances on."""
+        work = sum(len(r.context_tokens())
+                   + max(r.max_new_tokens - len(r.generated), 0)
+                   for r in self.queue)
+        work += sum(r.remaining_tokens() for r in self.active.values())
+        return work
+
+    # ------------------------------------------------------------------
+    def new_request(self, prompt: np.ndarray, max_new_tokens: int
+                    ) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        assert len(prompt) < self.ecfg.max_len, (
+            f"prompt of {len(prompt)} tokens exceeds max_len-1="
+            f"{self.ecfg.max_len - 1}")
+        r = Request(self.next_rid, prompt, max_new_tokens)
+        self.next_rid += 1
+        self.queue.append(r)
+        return r
+
+    def activate(self, r: Request, n_ctx: int, first_chunk: int):
+        """Give ``r`` a slot and pages for its first chunk (the caller
+        checked they are available)."""
+        r.slot = self.free_slots.pop()
+        r.n_ctx = n_ctx
+        r.pos = 0
+        if self.kvman is not None:
+            ok = self.kvman.ensure(r.slot, first_chunk)
+            assert ok, "admission page reservation failed"
+        self.active[r.rid] = r
+
+    def retire(self, r: Request):
+        """Release a finished request's slot and pages."""
+        r.done = True
+        self.free_slots.append(r.slot)
+        if self.kvman is not None:
+            self.kvman.release(r.slot)
+        self.completed[r.rid] = r
+        del self.active[r.rid]
+
+    def evict(self, v: Request):
+        """Requeue a preempted request for recompute-on-readmission."""
+        if v.prefilling:
+            v.preempted_in_prefill += 1
+        self.kvman.release(v.slot)
+        self.free_slots.append(v.slot)
+        del self.active[v.rid]
+        v.slot, v.pos, v.n_ctx, v.preempted = -1, 0, 0, v.preempted + 1
+        self.queue.appendleft(v)
+
+    # ------------------------------------------------------------------
+    def record_hist(self, hist: np.ndarray, ewma: float):
+        """Log one step's per-expert token histogram and fold it into
+        the expert-load EWMA (the rebalance signal)."""
+        self.expert_hist_log.append(hist)
+        if len(self.expert_hist_log) > self.HIST_LOG_CAP:
+            del self.expert_hist_log[:self.HIST_LOG_CAP // 2]
+        self.expert_loads = ewma * self.expert_loads + \
+            (1 - ewma) * (hist + 1e-3)

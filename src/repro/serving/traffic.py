@@ -67,6 +67,23 @@ def _lengths(rng, n, mean, sigma, lo, hi, tail_fraction, tail_scale):
     return np.clip(np.round(out), lo, hi).astype(np.int64)
 
 
+def spawn_traffic_configs(tcfg: TrafficConfig,
+                          num_replicas: int) -> list[TrafficConfig]:
+    """Per-replica traffic configs with *derived* independent RNG
+    streams (``np.random.SeedSequence.spawn``).
+
+    Naive per-replica seeding (``seed + i``) risks overlapping or
+    correlated streams; spawning gives each replica a statistically
+    independent child stream while staying fully reproducible from the
+    one parent seed — N replicas under load never see accidentally
+    identical prompts or arrival processes, and re-running the same
+    parent seed reproduces every replica's trace bit-for-bit.
+    """
+    children = np.random.SeedSequence(tcfg.seed).spawn(num_replicas)
+    return [dataclasses.replace(tcfg, seed=int(c.generate_state(1)[0]))
+            for c in children]
+
+
 def generate_trace(tcfg: TrafficConfig) -> list[SyntheticRequest]:
     rng = np.random.default_rng(tcfg.seed)
     n = tcfg.num_requests

@@ -1,0 +1,334 @@
+"""Cluster-layer lockdown: the refactor seam and the multi-replica
+router.
+
+  * **Seam determinism** — a single-replica ``ClusterEngine`` is token-
+    and expert_hist-identical to a bare ``ServingEngine`` on the same
+    trace, for both METRO and EPLB decode routing: the cluster layer
+    adds dispatch and placement sharing, never numerics.
+  * **Rebalance safety** — reshuffling the physical expert weights to a
+    new EPLB placement *while a chunked prefill is mid-prompt* leaves
+    generated tokens and per-call expert_hist bitwise unchanged
+    (replica choice moves compute, not math), and the scheduler's
+    ``rebalance_defer_prefill`` window holds a due local rebalance
+    until prefills drain.
+  * **Router** — round-robin and least-outstanding-work dispatch are
+    deterministic, spread load, and serve every request; the shared
+    placement is installed on every replica at the common window.
+  * **Traffic spawning** — per-replica derived RNG streams are
+    reproducible and uncorrelated.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import build_placement, slots_for_ratio
+from repro.models import init_lm
+from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                           ServingEngine, TrafficConfig, generate_trace,
+                           spawn_traffic_configs)
+from repro.sharding.policy import make_dist
+
+pytestmark = pytest.mark.slow
+
+
+_SETUP_CACHE: dict = {}
+
+
+def _setup(name="mixtral-8x22b"):
+    if name not in _SETUP_CACHE:
+        cfg = get_config(name).reduced()
+        ep = 4
+        spd = slots_for_ratio(cfg.num_experts, ep, 1.25) \
+            if cfg.is_moe else 1
+        dist = make_dist(None, ep_size=ep, slots_per_device=spd)
+        placement = (build_placement(cfg.num_experts, ep, spd)
+                     if cfg.is_moe else None)
+        params = init_lm(cfg, jax.random.PRNGKey(0), dist,
+                         replica_expert=placement.replica_expert
+                         if placement else None)
+        _SETUP_CACHE[name] = (cfg, dist, params)
+    return _SETUP_CACHE[name]
+
+
+def _ecfg(**kw):
+    return EngineConfig(**{"max_batch": 4, "max_len": 64,
+                           "rebalance_every": 0, "prefill_chunk": 8,
+                           **kw})
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n) for n in lengths]
+
+
+def _tokens(completed):
+    return {rid: tuple(r.generated) for rid, r in completed.items()}
+
+
+class TestSingleReplicaSeam:
+    """The refactor seam: cluster(1) == bare engine, bit for bit."""
+
+    @pytest.mark.parametrize("algo", ["metro", "eplb"])
+    def test_single_replica_cluster_equals_bare_engine(self, algo):
+        cfg, dist, params = _setup()
+        lengths = (5, 30, 9, 22, 7)
+        prompts = _prompts(cfg, lengths)
+
+        bare = ServingEngine(cfg, dist,
+                             jax.tree.map(lambda a: a, params),
+                             _ecfg(decode_algo=algo))
+        for p in prompts:
+            bare.submit(p, 6)
+        bare.run()
+
+        clus = ClusterEngine(cfg, dist, params,
+                             _ecfg(decode_algo=algo),
+                             ClusterConfig(num_replicas=1),
+                             step_cost=None)
+        for p in prompts:
+            clus.submit(p, 6)
+        clus.run()
+
+        assert _tokens(clus.completed) == _tokens(bare.completed)
+        assert len(clus.completed) == len(lengths)
+        hb = bare.expert_hist_log
+        hc = clus.replicas[0].expert_hist_log
+        assert len(hb) == len(hc) > 0
+        for a, b in zip(hb, hc):
+            np.testing.assert_array_equal(a, b)
+
+    def test_virtual_clock_does_not_change_tokens(self):
+        """The virtual-time cost model only relabels seconds: tokens
+        and hist are identical to the wall-clock run."""
+        cfg, dist, params = _setup()
+        prompts = _prompts(cfg, (5, 20, 9))
+
+        def serve(step_cost):
+            clus = ClusterEngine(cfg, dist, params, _ecfg(),
+                                 ClusterConfig(num_replicas=1),
+                                 step_cost=step_cost)
+            for p in prompts:
+                clus.submit(p, 5)
+            s = clus.run()
+            return _tokens(clus.completed), s
+
+        out_wall, _ = serve(None)
+        out_virt, s = serve(
+            lambda kind, n, st: 1e-3 + 1e-4 * st["max_activated"])
+        assert out_wall == out_virt
+        # virtual summaries are deterministic functions of the schedule
+        out_virt2, s2 = serve(
+            lambda kind, n, st: 1e-3 + 1e-4 * st["max_activated"])
+        assert s["tpot_p99"] == s2["tpot_p99"]
+        assert s["ttft_p99"] == s2["ttft_p99"]
+
+
+class TestRebalanceSafety:
+    def test_rebalance_mid_prefill_is_bitwise_invisible(self):
+        """Force a shared-placement reshuffle while a long prompt is
+        between chunks: tokens AND per-call expert_hist must match a
+        run that never rebalanced — replica→expert weight reshuffling
+        moves compute, not math."""
+        cfg, dist, params = _setup()
+        prompts = _prompts(cfg, (40, 6), seed=3)
+
+        def serve(kick):
+            eng = ServingEngine(cfg, dist,
+                                jax.tree.map(lambda a: a, params),
+                                _ecfg())
+            eng.submit(prompts[0], 5)
+            eng.submit(prompts[1], 5)
+            eng.step()                      # first chunks in flight
+            r0 = eng.active[0]
+            assert r0.prefilling            # genuinely mid-prompt
+            if kick:
+                # skew the load signal so the placement really changes
+                eng.state.expert_loads = np.arange(
+                    1.0, cfg.num_experts + 1.0)
+                before = eng.placement.replica_expert.copy()
+                eng.rebalance()
+                assert not np.array_equal(
+                    before, eng.placement.replica_expert), \
+                    "rebalance was a no-op; test is vacuous"
+            eng.run()
+            return eng
+
+        clean = serve(kick=False)
+        moved = serve(kick=True)
+        assert _tokens(clean.completed) == _tokens(moved.completed)
+        hc, hm = clean.expert_hist_log, moved.expert_hist_log
+        assert len(hc) == len(hm)
+        for a, b in zip(hc, hm):
+            np.testing.assert_array_equal(a, b)
+
+    def test_rebalance_window_defers_until_prefill_drains(self):
+        """With rebalance_defer_prefill (default), a window that lands
+        while a chunked prefill is in flight stays pending and fires on
+        the first decode step with no prefill in flight (prefills here
+        drain well inside the one-window deferral bound)."""
+        cfg, dist, params = _setup()
+        eng = ServingEngine(cfg, dist,
+                            jax.tree.map(lambda a: a, params),
+                            _ecfg(rebalance_every=4))
+        fired = []
+        orig = eng.exec.rebalance
+        eng.exec.rebalance = lambda *a, **k: (
+            fired.append(eng.state.prefills_in_flight()), orig(*a, **k))
+        prompts = _prompts(cfg, (40, 6), seed=4)
+        eng.submit(prompts[0], 4)
+        eng.submit(prompts[1], 4)
+        eng.run()
+        assert fired, "rebalance never fired"
+        assert all(n == 0 for n in fired), \
+            f"rebalance fired with prefills in flight: {fired}"
+
+    def test_rebalance_deferral_is_bounded(self):
+        """Sustained prefill pressure cannot starve the window: after
+        one extra window of deferral the rebalance fires even with a
+        prefill still in flight."""
+        cfg, dist, params = _setup()
+        eng = ServingEngine(cfg, dist,
+                            jax.tree.map(lambda a: a, params),
+                            _ecfg(rebalance_every=1))
+        fired = []
+        orig = eng.exec.rebalance
+        eng.exec.rebalance = lambda *a, **k: (
+            fired.append(eng.state.prefills_in_flight()), orig(*a, **k))
+        prompts = _prompts(cfg, (6, 40), seed=5)
+        eng.submit(prompts[0], 8)       # live decoder
+        eng.step()
+        eng.submit(prompts[1], 4)       # long prompt: several chunks
+        eng.run()
+        assert any(n > 0 for n in fired), \
+            "bounded deferral never forced a mid-prefill rebalance"
+
+    def test_rebalance_window_immediate_without_guard(self):
+        """rebalance_defer_prefill=False restores the unguarded window:
+        with a long prompt mid-prefill next to live decoders, some
+        window fires while a prefill is in flight."""
+        cfg, dist, params = _setup()
+        eng = ServingEngine(cfg, dist,
+                            jax.tree.map(lambda a: a, params),
+                            _ecfg(rebalance_every=1,
+                                  rebalance_defer_prefill=False))
+        fired = []
+        orig = eng.exec.rebalance
+        eng.exec.rebalance = lambda *a, **k: (
+            fired.append(eng.state.prefills_in_flight()), orig(*a, **k))
+        prompts = _prompts(cfg, (6, 40), seed=5)
+        eng.submit(prompts[0], 8)       # live decoder
+        eng.step()
+        eng.submit(prompts[1], 4)       # long prompt: several chunks
+        eng.run()
+        assert any(n > 0 for n in fired)
+
+
+class TestClusterRouter:
+    @pytest.mark.parametrize("dispatch", ["rr", "low"])
+    def test_two_replicas_serve_all_and_spread(self, dispatch):
+        cfg, dist, params = _setup()
+        clus = ClusterEngine(cfg, dist, params, _ecfg(),
+                             ClusterConfig(num_replicas=2,
+                                           dispatch=dispatch))
+        trace = generate_trace(TrafficConfig(
+            num_requests=8, arrival_rate=500.0, seed=6,
+            prompt_len_max=30, output_len_mean=5, output_len_max=6,
+            vocab_size=cfg.vocab_size))
+        s = clus.replay_open_loop(trace)
+        assert s["requests"] == 8
+        assert len(clus.completed) == 8
+        homes = {clus.replica_of(crid) for crid in clus.completed}
+        assert homes == {0, 1}, f"dispatch used only replicas {homes}"
+        assert all(len(r.generated) == trace[crid].max_new_tokens
+                   for crid, r in clus.completed.items())
+        # rollup structure
+        assert len(s["replicas"]) == 2
+        assert sum(s["requests_per_replica"]) == 8
+        assert s["tpot_p99"] >= s["tpot_p50"] >= 0
+
+    def test_round_robin_alternates(self):
+        cfg, dist, params = _setup()
+        clus = ClusterEngine(cfg, dist, params, _ecfg(),
+                             ClusterConfig(num_replicas=2,
+                                           dispatch="rr"),
+                             step_cost=None)
+        for p in _prompts(cfg, (4, 4, 4, 4)):
+            clus.submit(p, 2)
+        assert [clus.replica_of(i) for i in range(4)] == [0, 1, 0, 1]
+
+    def test_low_dispatch_prefers_idle_replica(self):
+        cfg, dist, params = _setup()
+        clus = ClusterEngine(cfg, dist, params, _ecfg(),
+                             ClusterConfig(num_replicas=2,
+                                           dispatch="low"),
+                             step_cost=None)
+        big, small = _prompts(cfg, (40, 5), seed=7)
+        clus.submit(big, 20)            # replica 0 gets the heavy one
+        assert clus.replica_of(0) == 0
+        clus.submit(small, 2)           # must go to the empty replica
+        assert clus.replica_of(1) == 1
+
+    def test_shared_placement_installed_on_all_replicas(self):
+        cfg, dist, params = _setup()
+        clus = ClusterEngine(cfg, dist, params, _ecfg(),
+                             ClusterConfig(num_replicas=2,
+                                           rebalance_every=4))
+        trace = generate_trace(TrafficConfig(
+            num_requests=6, arrival_rate=500.0, seed=8,
+            prompt_len_max=20, output_len_mean=6, output_len_max=8,
+            vocab_size=cfg.vocab_size))
+        clus.replay_open_loop(trace)
+        assert clus.rebalances > 0
+        a, b = (r.placement.replica_expert for r in clus.replicas)
+        np.testing.assert_array_equal(a, b)
+
+    def test_replica_compile_sharing(self):
+        """N identical replicas share one jit cache: each shape
+        signature compiles once across the fleet, not once per
+        replica."""
+        cfg, dist, params = _setup()
+        clus = ClusterEngine(cfg, dist, params, _ecfg(),
+                             ClusterConfig(num_replicas=2,
+                                           dispatch="rr"))
+        for p in _prompts(cfg, (6, 6, 6, 6), seed=9):
+            clus.submit(p, 4)
+        clus.run()
+        assert len(clus.completed) == 4
+        total = sum(r.slo.total_compiles for r in clus.replicas)
+        distinct = sum(len(v) for v in clus.replicas[0]._fns.values())
+        assert total == distinct, \
+            "a shape signature was compiled more than once fleet-wide"
+
+
+class TestTrafficSpawning:
+    def test_spawned_streams_reproducible_and_uncorrelated(self):
+        base = TrafficConfig(num_requests=16, seed=42)
+        cfgs_a = spawn_traffic_configs(base, 3)
+        cfgs_b = spawn_traffic_configs(base, 3)
+        # reproducible: same parent seed -> same children
+        assert [c.seed for c in cfgs_a] == [c.seed for c in cfgs_b]
+        # uncorrelated: distinct children, distinct traces
+        assert len({c.seed for c in cfgs_a}) == 3
+        traces = [generate_trace(c) for c in cfgs_a]
+        for i in range(3):
+            for j in range(i + 1, 3):
+                assert not all(
+                    np.array_equal(x.prompt, y.prompt)
+                    for x, y in zip(traces[i], traces[j])), \
+                    f"replica traces {i} and {j} are identical"
+        # and unequal to the parent's own trace
+        parent = generate_trace(base)
+        assert not all(np.array_equal(x.prompt, y.prompt)
+                       for x, y in zip(parent, traces[0]))
+
+    def test_spawn_differs_from_naive_increment(self):
+        base = TrafficConfig(num_requests=4, seed=0)
+        spawned = spawn_traffic_configs(base, 2)
+        assert spawned[0].seed != base.seed
+        assert spawned[1].seed != base.seed + 1
+        assert dataclasses.asdict(spawned[0]) != dataclasses.asdict(base) \
+            or True  # seeds checked above; configs otherwise identical
+        assert spawned[0].num_requests == base.num_requests

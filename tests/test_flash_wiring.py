@@ -1,0 +1,119 @@
+"""Flash-kernel wiring: ``EngineConfig.use_flash_kernel`` routes paged
+decode attention through the Pallas ``flash_decode_paged`` kernel.
+
+Layer-level parity (fast): ``attention_decode_paged(use_flash=True)``
+matches the jnp gather reference to accumulation-order tolerance on the
+SAME inputs — including the written-back pools being bitwise identical
+(the write path is shared; only the read/softmax differs).  SWA layers
+must ignore the flag (the decode kernel carries no window mask).
+
+Engine-level (slow): a chunked+mixed engine with the flag on serves a
+multi-request trace to completion, and every decode compile goes
+through the kernel path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import build_placement, slots_for_ratio
+from repro.models import init_lm
+from repro.models import layers as L
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.kv import PagedKVManager, pages_for
+from repro.sharding.policy import make_dist
+
+
+def _layer_setup(seed=0, b=3, ps=4, pmax=6, dtype=jnp.float32):
+    """A full-attention layer + half-filled paged pools + one new
+    token per row, shaped like the engine's decode step."""
+    cfg = get_config("mixtral-8x22b").reduced()
+    key = jax.random.PRNGKey(seed)
+    kp, kx, kk, kv_ = jax.random.split(key, 4)
+    params = L.init_attention(cfg, kp)
+    dims = L.attn_dims(cfg)
+    num_pages = 2 * b * pmax
+    man = PagedKVManager(num_pages=num_pages, page_size=ps,
+                         max_pages_per_seq=pmax, max_seqs=b)
+    rng = np.random.default_rng(seed)
+    pos = rng.integers(1, pmax * ps - 1, size=b).astype(np.int32)
+    for s in range(b):
+        assert man.ensure(s, int(pos[s]) + 1)
+    pools = {
+        "k": jax.random.normal(
+            kk, (num_pages, ps, dims.kv, dims.head_dim)).astype(dtype),
+        "v": jax.random.normal(
+            kv_, (num_pages, ps, dims.kv, dims.head_dim)).astype(dtype),
+    }
+    x = jax.random.normal(kx, (b, 1, cfg.d_model), jnp.float32)
+    pt = jnp.asarray(man.rows(np.arange(b)))
+    return cfg, params, x, pools, pt, jnp.asarray(pos)
+
+
+class TestLayerParity:
+    pytestmark = pytest.mark.fast
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_flash_matches_gather_reference(self, seed):
+        cfg, params, x, pools, pt, pos = _layer_setup(seed)
+        o_ref, c_ref = L.attention_decode_paged(
+            cfg, params, x, pools, pt, pos, use_flash=False)
+        o_fl, c_fl = L.attention_decode_paged(
+            cfg, params, x, pools, pt, pos, use_flash=True)
+        # the K/V write path is shared: pools must be bitwise equal
+        for k in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(c_ref[k]),
+                                          np.asarray(c_fl[k]))
+        # the read path differs only in softmax accumulation order
+        np.testing.assert_allclose(np.asarray(o_fl), np.asarray(o_ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_flash_matches_reference_bf16_pools(self):
+        """The serving pools are bf16: the kernel dequantizes
+        in-register, the reference upcasts the gathered view — same
+        stored values, looser accumulation tolerance."""
+        cfg, params, x, pools, pt, pos = _layer_setup(
+            3, dtype=jnp.bfloat16)
+        o_ref, _ = L.attention_decode_paged(
+            cfg, params, x, pools, pt, pos, use_flash=False)
+        o_fl, _ = L.attention_decode_paged(
+            cfg, params, x, pools, pt, pos, use_flash=True)
+        np.testing.assert_allclose(
+            np.asarray(o_fl, np.float32), np.asarray(o_ref, np.float32),
+            rtol=2e-2, atol=2e-2)
+
+    def test_swa_layers_ignore_the_flag(self):
+        """window != None keeps the gather reference (the decode kernel
+        has no sliding-window mask): identical outputs either way."""
+        cfg, params, x, pools, pt, pos = _layer_setup(4)
+        o_ref, _ = L.attention_decode_paged(
+            cfg, params, x, pools, pt, pos, window=8, use_flash=False)
+        o_fl, _ = L.attention_decode_paged(
+            cfg, params, x, pools, pt, pos, window=8, use_flash=True)
+        np.testing.assert_array_equal(np.asarray(o_ref),
+                                      np.asarray(o_fl))
+
+
+class TestEngineWiring:
+    pytestmark = pytest.mark.slow
+
+    def test_flash_engine_serves_to_completion(self):
+        cfg = get_config("mixtral-8x22b").reduced()
+        ep = 4
+        spd = slots_for_ratio(cfg.num_experts, ep, 1.25)
+        dist = make_dist(None, ep_size=ep, slots_per_device=spd)
+        placement = build_placement(cfg.num_experts, ep, spd)
+        params = init_lm(cfg, jax.random.PRNGKey(0), dist,
+                         replica_expert=placement.replica_expert)
+        eng = ServingEngine(cfg, dist, params, EngineConfig(
+            max_batch=4, max_len=64, rebalance_every=0,
+            prefill_chunk=8, use_flash_kernel=True))
+        rng = np.random.default_rng(0)
+        for n in (5, 20, 9):
+            eng.submit(rng.integers(0, cfg.vocab_size, n), 5)
+        s = eng.run()
+        assert s["requests"] == 3
+        assert all(len(r.generated) == 5
+                   for r in eng.completed.values())
+        assert eng.kvman.pages_in_use == 0
