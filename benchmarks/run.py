@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig12_pareto          decode Pareto frontier over TPxEPxbatch
   engine_scale          bucketing/paging compile discipline + Poisson load
   pareto_slo            cluster throughput-at-fixed-SLO (METRO vs EPLB)
+  prefix_cache          TTFT/pages-saved vs prefix-hit rate (METRO vs EPLB)
 """
 import argparse
 import sys
@@ -25,12 +26,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_engine_scale, bench_pareto_slo,
-                            fig5_engine, fig6_routing_overhead,
+                            bench_prefix_cache, fig5_engine,
+                            fig6_routing_overhead,
                             fig8_activated_experts, fig9_10_e2e,
                             fig11_breakdown, fig12_pareto)
     suites = {
         "engine_scale": lambda: bench_engine_scale.run(fast=args.fast),
         "pareto_slo": lambda: bench_pareto_slo.run(fast=args.fast)[0],
+        "prefix_cache": lambda: bench_prefix_cache.run(
+            fast=args.fast)[0],
         "fig6": lambda: fig6_routing_overhead.run(),
         "fig8": lambda: fig8_activated_experts.run(
             trials=3 if args.fast else 8),

@@ -136,16 +136,20 @@ def init_paged_cache(cfg: ModelConfig, dist: Dist, num_pages: int,
     """Serving cache with paged attention layers: per attention layer a
     shared page pool [n_blocks, num_pages, page_size, kv, hd]; mamba
     layers keep per-slot state (their state is O(1) per sequence, there
-    is nothing to page)."""
+    is nothing to page).  ``dtype`` sets the attention pool element
+    type (the engine's ``kv_dtype``: bf16/fp32/fp8 — paged reads are
+    dequant-aware); mamba recurrence state is never quantized below
+    bf16 (it feeds a sequential scan, not a dequantizing gather)."""
     kinds = cfg.layer_kinds()
     n_blocks = cfg.num_layers // len(kinds)
+    mamba_dtype = jnp.bfloat16 if jnp.dtype(dtype).itemsize == 1 else dtype
     cache = {}
     for i, (mixer, _) in enumerate(kinds):
         if mixer.startswith("attn"):
             c = L.init_paged_kv_cache(cfg, num_pages, page_size, dtype,
                                       tp=dist.ep_size)
         elif mixer == "mamba":
-            c = M.init_mamba_cache(cfg, max_batch, dtype)
+            c = M.init_mamba_cache(cfg, max_batch, mamba_dtype)
         else:
             continue
         cache[f"l{i}"] = jax.tree.map(
@@ -479,7 +483,9 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
                                  use_flash=use_flash_kernel)
             if nc:
                 new_bc[li] = nc
-            x = x + y
+            # cast keeps the residual stream in the compute dtype even
+            # when the mixer read a wider KV pool (kv_dtype="fp32")
+            x = x + y.astype(x.dtype)
             if ffn != "none":
                 h2 = L.apply_norm(cfg, lp["norm2"], x)
                 if ffn == "dense":

@@ -5,6 +5,7 @@ from repro.serving.executor import Executor
 from repro.serving.cluster import (ClusterConfig, ClusterEngine,
                                    default_step_cost)
 from repro.serving.kv import PagedKVManager, pages_for
+from repro.serving.prefix import PrefixMatch, RadixPrefixIndex
 from repro.serving.slo import (SLOTracker, VirtualClock,
                                aggregate_cluster_summary)
 from repro.serving.traffic import (SyntheticRequest, TrafficConfig,
@@ -16,6 +17,7 @@ __all__ = ["ServingEngine", "EngineConfig", "Request", "EngineState",
            "Scheduler", "Executor", "ClusterConfig", "ClusterEngine",
            "default_step_cost", "SLOTracker", "VirtualClock",
            "aggregate_cluster_summary", "PagedKVManager", "pages_for",
+           "PrefixMatch", "RadixPrefixIndex",
            "TrafficConfig", "SyntheticRequest", "generate_trace",
            "replay_open_loop", "replay_closed_loop",
            "spawn_traffic_configs"]

@@ -8,10 +8,13 @@ window), and lets each replica route tokens per phase (METRO decode /
 EPLB prefill).  This module reproduces that shape on simulated
 replicas:
 
-  * **Router** — ``dispatch="rr"`` round-robin, or ``dispatch="low"``
+  * **Router** — ``dispatch="rr"`` round-robin, ``dispatch="low"``
     least-outstanding-work (queued + active tokens remaining, the
-    natural unit for a token-serving fleet).  Deterministic: ties break
-    toward the lowest replica id.
+    natural unit for a token-serving fleet), or ``dispatch="prefix"``
+    prefix-affinity: the replica whose radix prefix index holds the
+    longest cached match of the prompt wins (cache reuse beats load
+    balance when a match exists), falling back to least-outstanding
+    work.  Deterministic: ties break toward the lowest replica id.
   * **Shared placement** — per-replica expert-load EWMAs are aggregated
     (:func:`repro.core.placement.aggregate_expert_loads`) into one
     cluster signal; one :func:`build_placement` runs; every replica
@@ -56,6 +59,8 @@ from repro.sharding.policy import Dist
 class ClusterConfig:
     num_replicas: int = 2
     dispatch: str = "low"       # "low" (least outstanding work) | "rr"
+                                # | "prefix" (longest cached prefix
+                                # match wins; falls back to "low")
     rebalance_every: int = 0    # cluster-wide decode steps between shared
                                 # EPLB reshuffles (0 = never)
 
@@ -88,7 +93,7 @@ class ClusterEngine:
                  routing_table_width: int = 0,
                  fn_cache: Optional[dict] = None):
         assert ccfg.num_replicas >= 1
-        assert ccfg.dispatch in ("low", "rr"), ccfg.dispatch
+        assert ccfg.dispatch in ("low", "rr", "prefix"), ccfg.dispatch
         self.cfg, self.dist = cfg, dist
         self.ccfg = ccfg
         self.step_cost = step_cost
@@ -123,18 +128,31 @@ class ClusterEngine:
     # ------------------------------------------------------------------
     # router
     # ------------------------------------------------------------------
-    def _pick_replica(self) -> int:
+    def _pick_replica(self, prompt=None) -> int:
         if self.ccfg.dispatch == "rr":
             i = self._rr % len(self.replicas)
             self._rr += 1
             return i
+        if self.ccfg.dispatch == "prefix" and prompt is not None:
+            # prefix affinity: the replica whose radix index holds the
+            # longest cached prefix of this prompt serves it — reuse
+            # beats balance when a match exists (the skipped prefill is
+            # work no other replica can avoid).  Ties, and the no-match
+            # case, fall back to least outstanding work; all ties break
+            # to the lowest replica id (deterministic).
+            matches = [r.prefix_match_len(prompt) for r in self.replicas]
+            best = max(matches)
+            if best > 0:
+                cand = [i for i, m in enumerate(matches) if m == best]
+                return min(cand, key=lambda i: (
+                    self.replicas[i].state.outstanding_tokens(), i))
         # least outstanding work; deterministic tie-break on replica id
         return int(np.argmin([r.state.outstanding_tokens()
                               for r in self.replicas]))
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
                arrival: Optional[float] = None) -> int:
-        ri = self._pick_replica()
+        ri = self._pick_replica(prompt)
         rep = self.replicas[ri]
         if arrival is not None and not rep.has_work:
             # an idle server starts working when the request arrives
@@ -225,7 +243,8 @@ class ClusterEngine:
     # open-loop replay (the Pareto harness's load loop)
     # ------------------------------------------------------------------
     def replay_open_loop(self, trace: list[SyntheticRequest], *,
-                         max_iters: int = 200_000) -> dict:
+                         max_iters: int = 200_000,
+                         on_iteration: Optional[Callable] = None) -> dict:
         """Submit each trace request at its arrival time and step the
         cluster in between (virtual time only — for wall-clock single-
         engine replay use :func:`repro.serving.traffic.replay_open_loop`).
@@ -239,6 +258,10 @@ class ClusterEngine:
         replica at the arrival time, which may become the new minimum,
         and later arrivals must not land on a replica whose clock is
         still behind them.
+
+        ``on_iteration(cluster)`` runs after every loop iteration — a
+        gauge hook (e.g. the prefix benchmark's pages-in-use peak) so
+        callers never have to clone this frontier logic.
         """
         assert self.step_cost is not None, (
             "cluster replay_open_loop needs the virtual-time cost "
@@ -257,5 +280,7 @@ class ClusterEngine:
                 i += 1
             if self.has_work:
                 self.step()
+            if on_iteration is not None:
+                on_iteration(self)
             it += 1
         return self.summary()

@@ -17,8 +17,16 @@ together (see serving/README.md for the full diagram):
     (deferred while chunked prefills are in flight).  No jax.
   * :mod:`repro.serving.executor`   — ``Executor``: the jit cache and
     decode/prefill/chunk/mixed step builders, input packing, the KV
-    cache pytree, and the EPLB placement + routing tables + logical
+    cache pytree (``kv_dtype``: bf16/fp32/fp8 paged pools), the CoW
+    page copy, and the EPLB placement + routing tables + logical
     master weights the rebalance loop reshuffles.  No scheduling.
+
+Below state sits the paged-KV substrate: :mod:`repro.serving.kv`
+(refcounted pages) and :mod:`repro.serving.prefix` (the shared-prefix
+radix cache — ``enable_prefix_cache``): admission starts a request's
+prefill at its longest cached prefix, sharing full pages read-only and
+copy-on-writing the boundary page; a prefix-hit request's tokens and
+logical KV are bitwise the cold run's (tests/test_prefix_cache.py).
 
 :class:`ServingEngine` keeps the public surface of the former monolith
 (``submit`` / ``step`` / ``run``, plus ``queue`` / ``active`` /
@@ -110,6 +118,23 @@ class EngineConfig:
     page_size: int = 16         # tokens per KV page
     num_pages: int = 0          # pool size; 0 -> full residency
                                 #   (max_batch * ceil(max_len/page_size))
+    kv_dtype: str = "bf16"      # paged pool element type: "bf16" |
+                                # "fp32" | "fp8" (fp8 halves KV residency;
+                                # paged reads dequantize in-path — paged
+                                # layout only)
+    # --- prefix cache (shared-prefix KV reuse) ---
+    enable_prefix_cache: bool = False   # radix prefix index over the
+                                # paged pool + copy-on-write boundary
+                                # pages (chunked+paged only; mamba-
+                                # bearing archs auto-disable — SSM state
+                                # is not paged)
+    prefix_min_tokens: int = 1  # shortest cached match worth taking
+                                # (a 1-token hit still costs a CoW copy)
+    admit_reserve_frac: float = 0.0     # page-aware admission headroom:
+                                # fraction of a request's future page
+                                # demand held back, decayed by queue
+                                # depth (0 = PR-2's plain first-chunk
+                                # gate)
     # --- kernels ---
     use_flash_kernel: bool = False  # paged decode attention through the
                                     # Pallas flash_decode_paged kernel
@@ -126,6 +151,9 @@ class ServingEngine:
         assert ecfg.bucket_mode in ("pow2", "fixed"), ecfg.bucket_mode
         assert ecfg.kv_layout in ("paged", "dense"), ecfg.kv_layout
         assert ecfg.prefill_mode in ("chunked", "wave"), ecfg.prefill_mode
+        assert ecfg.kv_dtype in ("bf16", "fp32", "fp8"), ecfg.kv_dtype
+        assert ecfg.kv_dtype == "bf16" or ecfg.kv_layout == "paged", \
+            "kv_dtype plumbing is paged-path only"
         self.cfg = cfg
         self.dist = dist
         self.ecfg = ecfg
@@ -139,10 +167,21 @@ class ServingEngine:
         # monolithic wave path.
         self.chunked = (ecfg.prefill_mode == "chunked"
                         and ecfg.kv_layout == "paged")
-        self.state = EngineState(ecfg, cfg.num_experts)
+        # prefix reuse needs resumable chunked prefill over the paged
+        # pool, and every mixer's state must live in pages — mamba's
+        # per-slot SSM state can't be rejoined at an arbitrary match
+        # point, so mamba-bearing archs auto-disable (documented in
+        # serving/prefix.py)
+        self.prefix_enabled = bool(
+            ecfg.enable_prefix_cache and self.chunked
+            and cfg.family != "encdec"
+            and all(mixer != "mamba" for mixer, _ in cfg.layer_kinds()))
+        self.state = EngineState(ecfg, cfg.num_experts,
+                                 prefix_enabled=self.prefix_enabled)
         self.exec = Executor(cfg, dist, ecfg, params, self.slo,
                              routing_table_width, fn_cache=fn_cache)
-        self.sched = Scheduler(ecfg, self.state, self.slo, self.chunked)
+        self.sched = Scheduler(ecfg, self.state, self.slo, self.chunked,
+                               copy_pages=self.exec.run_copy_pages)
 
     # ------------------------------------------------------------------
     # state / executor delegation (the monolith's public surface)
@@ -166,6 +205,10 @@ class ServingEngine:
     @property
     def kvman(self):
         return self.state.kvman
+
+    @property
+    def prefix_index(self):
+        return self.state.prefix
 
     @property
     def decode_steps(self):
@@ -209,6 +252,15 @@ class ServingEngine:
 
     def _admit(self):
         return self.sched.admit()
+
+    def prefix_match_len(self, prompt: np.ndarray) -> int:
+        """Longest *takeable* cached prefix of ``prompt`` (0 when the
+        cache is off or the match is below admission's eligibility bar
+        — one shared definition, ``Scheduler.eligible_match``, so
+        dispatch can never chase a match admission would refuse) — the
+        cluster's prefix-affinity signal.  Pure peek: no LRU update."""
+        m = self.sched.eligible_match(prompt)
+        return m.m if m is not None else 0
 
     def _preempt_one(self, protect_rid: int) -> bool:
         return self.sched.preempt_one(protect_rid)
@@ -380,9 +432,11 @@ class ServingEngine:
     def _start_chunks(self, pwork: list[tuple[Request, int]]):
         """Stamp prefill_start BEFORE the chunk-carrying call is issued
         (the wave path does the same), so the first chunk's time lands
-        in the TTFT prefill span, not the queue wait."""
+        in the TTFT prefill span, not the queue wait.  A prefix-hit
+        request starts its first chunk at the match point
+        (``admit_pos``), not 0 — the skipped tokens belong to no span."""
         for r, _ in pwork:
-            if r.pos == 0:
+            if r.pos == r.admit_pos:
                 self.slo.prefill_started(r.rid)
 
     def _finish_chunks(self, pwork: list[tuple[Request, int]]):

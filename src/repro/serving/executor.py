@@ -31,6 +31,17 @@ from repro.serving.scheduler import _pow2
 from repro.serving.state import Request
 from repro.sharding.policy import Dist
 
+# EngineConfig.kv_dtype -> pool dtype.  fp8 pools are dequantized to
+# bf16 inside the paged read paths (gather reference and Pallas kernels
+# both branch on itemsize == 1); writes quantize on the scatter's
+# astype.  Parity vs an fp32 pool is tolerance-pinned in
+# tests/test_prefix_cache.py.
+KV_DTYPES = {
+    "bf16": jnp.bfloat16,
+    "fp32": jnp.float32,
+    "fp8": jnp.float8_e4m3fn,
+}
+
 
 class Executor:
     def __init__(self, cfg: ModelConfig, dist: Dist, ecfg, params, slo,
@@ -59,17 +70,19 @@ class Executor:
         else:
             self.placement, self.routing = None, {}
 
+        kv_dtype = KV_DTYPES[getattr(ecfg, "kv_dtype", "bf16")]
         if ecfg.kv_layout == "paged":
             pmax = pages_for(ecfg.max_len, ecfg.page_size)
             num_pages = ecfg.num_pages or ecfg.max_batch * pmax
             self.cache = LM.init_paged_cache(
-                cfg, dist, num_pages, ecfg.page_size, ecfg.max_batch)
+                cfg, dist, num_pages, ecfg.page_size, ecfg.max_batch,
+                dtype=kv_dtype)
         else:
             self.cache = LM.init_cache(cfg, dist, ecfg.max_batch,
                                        ecfg.max_len)
         if fn_cache is None:
             fn_cache = {"decode": {}, "prefill": {}, "chunk": {},
-                        "mixed": {}}
+                        "mixed": {}, "copy": {}}
         self._fns: dict[str, dict] = fn_cache
 
     # ------------------------------------------------------------------
@@ -121,7 +134,9 @@ class Executor:
     # step functions (compiled once per shape signature)
     # ------------------------------------------------------------------
     def _get_fn(self, kind: str, key, builder):
-        fns = self._fns[kind]
+        # setdefault: externally-supplied fn_caches predating a kind
+        # (e.g. "copy") still work
+        fns = self._fns.setdefault(kind, {})
         if key not in fns:
             fns[key] = builder()
             self.slo.compiled(kind, key)
@@ -130,7 +145,7 @@ class Executor:
     def compiled_buckets(self, kind: str):
         """Shape keys already built for ``kind`` (the scheduler's
         bucket-grace policy reads the decode set)."""
-        return self._fns[kind].keys()
+        return self._fns.setdefault(kind, {}).keys()
 
     def decode_fn(self, bucket: int):
         def build():
@@ -226,6 +241,45 @@ class Executor:
                 return nxt, cache2, st_p, st_d
             return step
         return self._get_fn("mixed", (bp, bd), build)
+
+    def copy_fn(self):
+        """Copy-on-write page copy: duplicate one physical page's K/V
+        contents (every attention layer's pool) into a fresh page, so a
+        prefix-hit request can write its own suffix into the boundary
+        page without corrupting the shared original.  Only the first
+        ``keep`` token offsets (the matched prefix tokens living in the
+        boundary page) are copied; the rest of the destination page is
+        zeroed — exactly the state a cold prefill would find, which is
+        what makes a hit request's pages BITWISE equal to the cold
+        run's (and keeps stale source bytes from ever entering the
+        copy).  One jitted signature total — src/dst/keep are data, and
+        per-slot (mamba) cache entries pass through untouched (the
+        prefix cache is disabled for mamba-bearing archs; their state
+        is not paged)."""
+        def build():
+            @jax.jit
+            def fn(cache, src, dst, keep):
+                out = {}
+                for li, pool in cache.items():
+                    if "k" not in pool:
+                        out[li] = pool
+                        continue
+                    ps = pool["k"].shape[2]
+                    mask = (jnp.arange(ps) < keep)[None, :, None, None]
+                    out[li] = {kk: pool[kk].at[:, dst].set(
+                        jnp.where(mask, pool[kk][:, src],
+                                  jnp.zeros((), pool[kk].dtype)))
+                        for kk in ("k", "v")}
+                return out
+            return fn
+        return self._get_fn("copy", 0, build)
+
+    def run_copy_pages(self, src: int, dst: int, keep: int):
+        """Device copy of physical page ``src`` -> ``dst``: the first
+        ``keep`` token offsets, rest zeroed (CoW boundary page)."""
+        fn = self.copy_fn()
+        self.cache = fn(self.cache, jnp.int32(src), jnp.int32(dst),
+                        jnp.int32(keep))
 
     # ------------------------------------------------------------------
     # input packing (numpy host state -> padded jnp step inputs)

@@ -1,4 +1,5 @@
-"""Paged KV-cache manager: fixed-size pages + a free-list allocator.
+"""Paged KV-cache manager: fixed-size pages, a free-list allocator, and
+reference-counted sharing for the prefix cache.
 
 The dense per-slot cache (``[max_batch, max_len]``) forces
 ``max_batch * max_len`` tokens of KV residency whether or not the slots
@@ -18,6 +19,26 @@ The manager here is pure host-side numpy bookkeeping:
   * incremental growth: ``ensure(slot, length)`` allocates just the
     pages needed to cover ``length`` tokens; the engine preempts a
     victim sequence when the pool runs dry.
+
+**Shared-prefix extensions** (``serving/prefix.py`` builds on these):
+
+  * ``refcount[p]`` counts the page-table entries mapping physical page
+    ``p`` — :meth:`map_shared` maps an existing page into a second (or
+    third, …) slot's table, so requests with a common prompt prefix
+    read ONE physical copy.  Shared pages are read-only by convention:
+    a request only ever writes positions >= its own prefill start, and
+    admission maps shared pages strictly below that point (the
+    partially-filled boundary page is **copied**, never shared — the
+    copy-on-write step the scheduler drives via
+    :meth:`Executor.run_copy_pages`).
+  * ``indexed[p]`` marks pages retained by the radix prefix index after
+    their last sequence released them (cached, reclaimable).  A page
+    returns to the free list only when it is neither table-referenced,
+    indexed, nor pinned.
+  * ``pin``/``unpin`` hold a page alive across the admission window
+    between matching a copy-on-write source and completing the device
+    copy (eviction during that window would hand the source page to the
+    very allocation that wants to copy from it).
 
 Device-side page pools live in the model cache pytree with layout
 ``[num_pages, page_size, kv_heads, head_dim]`` per attention layer —
@@ -59,6 +80,13 @@ class PagedKVManager:
         self.page_table = np.full(
             (self.max_seqs, self.max_pages_per_seq), -1, np.int32)
         self._owned = np.zeros(self.max_seqs, np.int32)  # pages per slot
+        # --- sharing state (prefix cache) ---
+        self.refcount = np.zeros(self.num_pages, np.int32)  # table refs
+        self.indexed = np.zeros(self.num_pages, bool)   # prefix-index held
+        self._pins = np.zeros(self.num_pages, np.int32)  # CoW-copy guards
+        # --- counters (benchmark observables) ---
+        self.alloc_count = 0        # pages popped from the free list
+        self.shared_count = 0       # table entries satisfied by sharing
 
     # ------------------------------------------------------------------
     @property
@@ -67,12 +95,30 @@ class PagedKVManager:
 
     @property
     def pages_in_use(self) -> int:
+        """Pages not on the free list (table-referenced, index-cached,
+        or pinned)."""
         return self.num_pages - len(self._free)
+
+    @property
+    def num_reclaimable(self) -> int:
+        """Pages held ONLY by the prefix index — evicting their nodes
+        (leaf-first, see ``RadixPrefixIndex.reclaim``) returns exactly
+        these pages to the free list.  The page-aware admission policy
+        budgets against ``num_free + num_reclaimable``."""
+        return int((self.indexed & (self.refcount == 0)
+                    & (self._pins == 0)).sum())
 
     def owned(self, slot: int) -> int:
         return int(self._owned[slot])
 
     # ------------------------------------------------------------------
+    # refcount plumbing
+    # ------------------------------------------------------------------
+    def _maybe_free(self, p: int):
+        if (self.refcount[p] == 0 and not self.indexed[p]
+                and self._pins[p] == 0):
+            self._free.append(p)
+
     def ensure(self, slot: int, length: int) -> bool:
         """Grow slot's table to cover ``length`` tokens.  Returns False
         (allocating nothing) if the free list can't cover the growth."""
@@ -88,18 +134,75 @@ class PagedKVManager:
         if need > len(self._free):
             return False
         for i in range(have, want):
-            self.page_table[slot, i] = self._free.pop()
+            p = self._free.pop()
+            self.page_table[slot, i] = p
+            self.refcount[p] += 1
+            self.alloc_count += 1
         self._owned[slot] = want
         return True
 
+    def map_shared(self, slot: int, pages: list[int]):
+        """Map existing physical ``pages`` (a cached prefix, in logical
+        order) into the *empty* table of ``slot``, bumping refcounts.
+        Shared pages are read-only for this slot: the scheduler maps
+        only pages strictly below the request's prefill start."""
+        assert self.owned(slot) == 0, "map_shared into a non-empty slot"
+        assert len(pages) <= self.max_pages_per_seq
+        for i, p in enumerate(pages):
+            assert self.refcount[p] > 0 or self.indexed[p] or \
+                self._pins[p] > 0, f"sharing an unallocated page {p}"
+            self.page_table[slot, i] = p
+            self.refcount[p] += 1
+            self.shared_count += 1
+        self._owned[slot] = len(pages)
+
     def release(self, slot: int) -> int:
-        """Free every page owned by ``slot``; returns the count freed."""
+        """Unmap every page owned by ``slot`` (decref); returns how many
+        actually went back to the free list (shared or index-cached
+        pages survive their last slot reference)."""
         n = self.owned(slot)
+        freed = 0
+        before = len(self._free)
         for i in range(n):
-            self._free.append(int(self.page_table[slot, i]))
+            p = int(self.page_table[slot, i])
             self.page_table[slot, i] = -1
+            self.refcount[p] -= 1
+            assert self.refcount[p] >= 0
+            self._maybe_free(p)
+        freed = len(self._free) - before
         self._owned[slot] = 0
-        return n
+        return freed
+
+    # ------------------------------------------------------------------
+    # prefix-index holds + CoW pins
+    # ------------------------------------------------------------------
+    def index_page(self, p: int):
+        """Mark ``p`` as retained by the prefix index (it survives its
+        owning slot's release)."""
+        assert self.refcount[p] > 0 or self.indexed[p] or \
+            self._pins[p] > 0, f"indexing an unallocated page {p}"
+        self.indexed[p] = True
+
+    def unindex_page(self, p: int) -> bool:
+        """Drop the index's hold on ``p``; returns True if the page went
+        back to the free list (no slot was still mapping it)."""
+        assert self.indexed[p]
+        self.indexed[p] = False
+        before = len(self._free)
+        self._maybe_free(p)
+        return len(self._free) > before
+
+    def pin(self, p: int):
+        """Guard ``p`` against eviction/free until :meth:`unpin` — used
+        across the CoW admission window (match -> device copy)."""
+        assert self.refcount[p] > 0 or self.indexed[p] or \
+            self._pins[p] > 0, f"pinning an unallocated page {p}"
+        self._pins[p] += 1
+
+    def unpin(self, p: int):
+        assert self._pins[p] > 0
+        self._pins[p] -= 1
+        self._maybe_free(p)
 
     # ------------------------------------------------------------------
     def rows(self, slots: np.ndarray) -> np.ndarray:
@@ -107,24 +210,45 @@ class PagedKVManager:
         return self.page_table[np.asarray(slots, np.int64)].copy()
 
     # ------------------------------------------------------------------
-    # invariants (used by the preemption/chunking regression tests)
+    # invariants (used by the preemption/chunking regression tests and
+    # the refcount/CoW hypothesis fuzz)
     # ------------------------------------------------------------------
     def mapped_pages(self) -> np.ndarray:
-        """Sorted physical ids of every currently-mapped page."""
+        """Sorted physical ids of every table entry (with sharing, a
+        page mapped by k slots appears k times)."""
         return np.sort(self.page_table[self.page_table >= 0])
 
     def check_consistent(self):
-        """Assert the allocator invariants: no physical page is mapped
-        twice (chunk-resume must never double-write a page), the free
-        list is disjoint from the mapped set, and together they cover
-        the pool exactly."""
-        mapped = self.mapped_pages()
-        assert len(mapped) == len(np.unique(mapped)), \
-            "a physical page is mapped by two table entries"
-        free = np.asarray(self._free, np.int64)
-        assert len(np.intersect1d(mapped, free)) == 0, \
-            "a free page is still mapped"
-        assert len(mapped) + len(free) == self.num_pages, \
-            "pages leaked: mapped + free != pool"
-        assert int(self._owned.sum()) == len(mapped), \
-            "per-slot owned counts disagree with the table"
+        """Assert the allocator invariants:
+
+          * refcounts match table membership exactly (a page's refcount
+            is the number of table entries mapping it — chunk-resume
+            can never double-write a page because a slot maps each of
+            its logical pages once, and writes only land above the
+            shared prefix),
+          * no page is simultaneously free and referenced (by a table
+            entry, the prefix index, or a pin),
+          * free + referenced cover the pool exactly (no leaks),
+          * the free list holds no duplicates,
+          * per-slot tables are contiguous and agree with ``_owned``.
+        """
+        entries = self.page_table[self.page_table >= 0]
+        counts = np.bincount(entries, minlength=self.num_pages) \
+            if len(entries) else np.zeros(self.num_pages, np.int64)
+        assert (counts == self.refcount).all(), \
+            "refcounts disagree with page-table membership"
+        assert len(self._free) == len(set(self._free)), \
+            "free list holds a duplicate page"
+        free = np.zeros(self.num_pages, bool)
+        free[np.asarray(self._free, np.int64)] = True
+        referenced = (self.refcount > 0) | self.indexed | (self._pins > 0)
+        assert not (free & referenced).any(), \
+            "a page is both free and referenced"
+        assert (free | referenced).all(), \
+            "pages leaked: neither free nor referenced"
+        for s in range(self.max_seqs):
+            n = int(self._owned[s])
+            assert (self.page_table[s, :n] >= 0).all(), \
+                "hole inside an owned table prefix"
+            assert (self.page_table[s, n:] == -1).all(), \
+                "table entry beyond the owned count"

@@ -1,0 +1,311 @@
+"""Radix prefix index over the paged KV pool: shared-prefix reuse.
+
+Real serving traffic is prefix-heavy — system prompts, few-shot
+preambles, and multi-turn sessions repeat the same leading tokens across
+millions of requests.  Prefilling those tokens again and again is pure
+waste, and (per the paper's memory-bound thesis) the cycles it burns are
+*compute* cycles stolen from a decode phase that is already starved for
+HBM bandwidth.  This module caches the KV pages a completed prefill
+wrote and lets a new request start its prefill at the end of its longest
+cached prefix: skipped tokens never enter chunk planning, the TTFT
+prefill span, or the expert-load EWMA.
+
+Design (pages are the unit of storage, tokens the unit of matching):
+
+  * The index is a radix trie in which **every node owns exactly one
+    physical page** of the pool.  A node's key is the page's token
+    content — ``page_size`` tokens for interior/full nodes, fewer for a
+    *partial tail* node (a cached prefix whose length is not
+    page-aligned; always a leaf).
+  * **Match** walks full-page-exact hops as far as possible (those
+    pages are shared read-only into the new request's page table), then
+    takes the best token-level partial match into one more node.  A
+    partial match — or a full match of a partial tail — means the new
+    request will write its own tokens into that page, so the page is a
+    **copy-on-write source**: the scheduler allocates a fresh page and
+    copies the device contents before the request's first chunk runs
+    (``Executor.run_copy_pages``).  Positions below the match point in
+    the copy are canonical prefix KV; positions at/above it are
+    overwritten by the request's own prefill/decode before they can be
+    attended (the causal mask admits only ``spos <= pos``).
+  * **Insert** happens when a request *retires*: the prefilled prefix
+    (``context_tokens()[:n_ctx]`` — always canonical: position ``p``
+    holds token ``p``'s KV) is walked into the trie.  Pages whose token
+    content already has a node are **deduplicated** (the retiring copy
+    is simply released with the slot); only diverging pages are
+    indexed.  KV content for a given (token sequence, position) is
+    deterministic — independent of batch composition, chunk split, and
+    physical page id (``row_valid`` keeps MoE routing padding-invariant
+    and attention reads are page-table gathers) — which is what makes
+    both dedup and reuse bitwise safe (pinned by
+    tests/test_prefix_cache.py).
+  * **Evict** is leaf-first LRU: a node is evictable when it has no
+    children and no page-table entry maps its page (the manager's
+    refcount — shared ancestors of an in-flight request are pinned by
+    construction because a match maps every ancestor page).  Evicting a
+    leaf may expose its parent.  ``reclaim(n)`` frees up to ``n`` pages
+    and is driven by the page-aware admission policy and by
+    ``Scheduler.reserve`` *before* any running request is preempted —
+    cache is always cheaper to drop than work is to recompute.
+
+Restrictions: attention layers only.  Mamba/SSM state is O(1) per
+sequence and not paged, so a mid-sequence snapshot would have to be
+captured per page boundary to resume from an arbitrary match point; the
+engine auto-disables the prefix cache for mamba-bearing architectures
+(see ``ServingEngine.prefix_enabled``).  Sliding-window layers work
+unchanged: paged SWA stores the full sequence and masks the window at
+read time, so shared pages hold exactly what a cold prefill would have
+written.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.kv import PagedKVManager
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Result of matching a token sequence against the index.
+
+    ``m``        — matched token count (prefill may start at position m).
+    ``pages``    — physical pages fully covered by the match, in logical
+                   order; shared read-only into the new slot's table.
+    ``cow_src``  — physical page a token-level partial match landed in
+                   (None when the match ends exactly on a page
+                   boundary); the request's boundary page must be
+                   *copied* from it before first use.
+    ``nodes``    — the matched trie path (full nodes + the CoW node),
+                   for the LRU touch at commit time.
+    """
+    m: int
+    pages: list
+    cow_src: Optional[int]
+    nodes: list
+
+    @property
+    def hit(self) -> bool:
+        return self.m > 0
+
+
+class _Node:
+    __slots__ = ("tokens", "page", "children", "parent", "last_access",
+                 "nid")
+
+    def __init__(self, tokens, page, parent, nid, tick):
+        self.tokens = tokens        # tuple[int], len <= page_size
+        self.page = page            # physical page id
+        self.children = {}          # token-tuple -> _Node
+        self.parent = parent
+        self.last_access = tick
+        self.nid = nid
+
+
+def _common(a: tuple, b) -> int:
+    n = min(len(a), len(b))
+    k = 0
+    while k < n and a[k] == int(b[k]):
+        k += 1
+    return k
+
+
+class RadixPrefixIndex:
+    """Token-content radix trie over physical KV pages (host side)."""
+
+    def __init__(self, kvman: PagedKVManager, page_size: int):
+        assert page_size == kvman.page_size
+        self.kvman = kvman
+        self.ps = page_size
+        self._root = _Node((), -1, None, -1, 0)
+        self._tick = 0
+        self._next_id = 0
+        # observables
+        self.hits = 0
+        self.misses = 0
+        self.inserted_pages = 0
+        self.deduped_pages = 0
+        self.evicted_pages = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        def count(n):
+            return sum(1 + count(c) for c in n.children.values())
+        return count(self._root)
+
+    def cached_pages(self) -> int:
+        return int(self.kvman.indexed.sum())
+
+    def _tok(self):
+        self._tick += 1
+        return self._tick
+
+    # ------------------------------------------------------------------
+    # match
+    # ------------------------------------------------------------------
+    def match(self, tokens) -> PrefixMatch:
+        """Longest cached prefix of ``tokens`` (pure: no LRU update —
+        commit a taken match with :meth:`touch`).  Deterministic: exact
+        full-page hops first, then the child sharing the most leading
+        tokens (ties to the oldest node)."""
+        toks = np.asarray(tokens)
+        node, i = self._root, 0
+        pages: list[int] = []
+        path: list[_Node] = []
+        n = len(toks)
+        while True:
+            rem = n - i
+            if rem >= self.ps:
+                child = node.children.get(
+                    tuple(int(t) for t in toks[i:i + self.ps]))
+                if child is not None and len(child.tokens) == self.ps:
+                    pages.append(child.page)
+                    path.append(child)
+                    node = child
+                    i += self.ps
+                    continue
+            best, bk = None, 0
+            for key, ch in node.children.items():
+                k = _common(key, toks[i:i + len(key)])
+                if k > bk or (k == bk and k > 0 and ch.nid < best.nid):
+                    best, bk = ch, k
+            break
+        if bk > 0:
+            path.append(best)
+            return PrefixMatch(i + bk, pages, best.page, path)
+        return PrefixMatch(i, pages, None, path)
+
+    def touch(self, match: PrefixMatch):
+        """Bump the LRU clock on a taken match's path."""
+        for nd in match.nodes:
+            nd.last_access = self._tok()
+
+    # ------------------------------------------------------------------
+    # insert
+    # ------------------------------------------------------------------
+    def insert(self, tokens, phys_pages) -> int:
+        """Index the prefilled prefix ``tokens`` backed by ``phys_pages``
+        (the owning slot's table entries, logical order — must still be
+        mapped: call before the slot is released).  Pages whose content
+        is already cached are deduplicated; returns how many pages were
+        newly indexed."""
+        toks = np.asarray(tokens)
+        n = len(toks)
+        assert len(phys_pages) == -(-n // self.ps)
+        node, i, pi, added = self._root, 0, 0, 0
+        while i < n:
+            c = min(self.ps, n - i)
+            key = tuple(int(t) for t in toks[i:i + c])
+            child = node.children.get(key)
+            if child is not None:
+                # identical page content already cached: dedupe (the
+                # retiring copy is released with its slot)
+                child.last_access = self._tok()
+                self.deduped_pages += 1
+                node = child
+                i += c
+                pi += 1
+                continue
+            if c < self.ps and any(len(k2) > c and k2[:c] == key
+                                   for k2 in node.children):
+                # the new partial tail is a strict prefix of an
+                # existing (longer) page — that page already serves
+                # every match this one could (the CoW copy takes only
+                # matched offsets), so indexing it would just pin a
+                # redundant page
+                self.deduped_pages += 1
+                break
+            # conversely, a now-redundant existing partial tail (its
+            # tokens are a strict prefix of the new page) is dropped
+            # when free — the longer node subsumes it
+            for k2 in list(node.children):
+                ch = node.children[k2]
+                if (len(ch.tokens) < c and key[:len(ch.tokens)] == k2
+                        and not ch.children and self._evictable(ch)):
+                    self._evict(ch)
+            page = int(phys_pages[pi])
+            self.kvman.index_page(page)
+            new = _Node(key, page, node, self._next_id, self._tok())
+            self._next_id += 1
+            node.children[key] = new
+            self.inserted_pages += 1
+            added += 1
+            node = new
+            i += c
+            pi += 1
+        return added
+
+    # ------------------------------------------------------------------
+    # eviction (leaf-first LRU)
+    # ------------------------------------------------------------------
+    def _evictable(self, nd: _Node) -> bool:
+        return (not nd.children and self.kvman.refcount[nd.page] == 0
+                and self.kvman._pins[nd.page] == 0)
+
+    def _evict(self, nd: _Node):
+        del nd.parent.children[nd.tokens]
+        self.kvman.unindex_page(nd.page)
+        self.evicted_pages += 1
+
+    def _evictable_leaves(self) -> list:
+        out = []
+
+        def walk(n):
+            for c in n.children.values():
+                walk(c)
+                if self._evictable(c):
+                    out.append(c)
+        walk(self._root)
+        return out
+
+    def reclaim(self, n_pages: int) -> int:
+        """Evict least-recently-used evictable leaves until ``n_pages``
+        pages went back to the free list (or nothing is left to evict).
+        Returns the number freed.  One trie walk total: evicting a leaf
+        may expose its parent, which joins the heap — admission and
+        ``Scheduler.reserve`` call this under pool pressure, so the
+        cost must not scale with (nodes x pages)."""
+        freed = 0
+        heap = [((nd.last_access, nd.nid), nd)
+                for nd in self._evictable_leaves()]
+        heapq.heapify(heap)
+        while freed < n_pages and heap:
+            _, nd = heapq.heappop(heap)
+            parent = nd.parent
+            self._evict(nd)
+            freed += 1
+            if parent is not self._root and self._evictable(parent):
+                heapq.heappush(
+                    heap, ((parent.last_access, parent.nid), parent))
+        return freed
+
+    def clear(self) -> int:
+        """Drop every evictable node (cache flush); returns pages freed."""
+        return self.reclaim(self.kvman.num_pages)
+
+    # ------------------------------------------------------------------
+    # invariants (tests + hypothesis fuzz)
+    # ------------------------------------------------------------------
+    def check_consistent(self):
+        """Index invariants: every node owns a distinct page, the set of
+        node pages is exactly the manager's ``indexed`` set, interior
+        nodes are full pages, and partial nodes are leaves."""
+        pages = []
+
+        def walk(nd):
+            for c in nd.children.values():
+                assert len(c.tokens) <= self.ps
+                if len(c.tokens) < self.ps:
+                    assert not c.children, "partial node with children"
+                pages.append(c.page)
+                walk(c)
+        walk(self._root)
+        assert len(pages) == len(set(pages)), \
+            "two index nodes own the same page"
+        want = set(int(p) for p in np.where(self.kvman.indexed)[0])
+        assert set(pages) == want, \
+            "index nodes disagree with kvman.indexed"

@@ -6,12 +6,22 @@ Pure host-side decisions over :class:`repro.serving.state.EngineState`
 to run each iteration and hands the chosen rows to the executor; this
 separation is what lets the cluster layer drive many engines with
 different placement policies without touching the jit path.
+
+(The one device-touching exception is injected: ``copy_pages`` is the
+executor's copy-on-write page copy, called at the moment admission
+stages a boundary page — the copy must land before anything can evict
+or write the source, so it cannot be deferred to the engine loop.)
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
 
 from repro.serving.kv import pages_for
+from repro.serving.prefix import PrefixMatch
 from repro.serving.state import EngineState, Request
 
 
@@ -19,12 +29,25 @@ def _pow2(n: int) -> int:
     return 1 << max(0, (int(n) - 1).bit_length())
 
 
+@dataclasses.dataclass
+class AdmissionPlan:
+    """One queued request's page-aware admission decision."""
+    decision: str               # "admit" | "defer"
+    n_ctx: int
+    first_target: int           # tokens whose pages are reserved now
+    match: Optional[PrefixMatch]
+    need: int                   # fresh pages required for first_target
+    budget: int                 # free + reclaimable available to it
+
+
 class Scheduler:
-    def __init__(self, ecfg, state: EngineState, slo, chunked: bool):
+    def __init__(self, ecfg, state: EngineState, slo, chunked: bool,
+                 copy_pages: Optional[Callable] = None):
         self.ecfg = ecfg
         self.state = state
         self.slo = slo
         self.chunked = chunked
+        self.copy_pages = copy_pages    # executor CoW copy (src, dst)
         self._bucket_demand: dict[int, int] = {}
         self._rebalance_pending = False
         self._rebalance_pending_since = 0
@@ -32,35 +55,145 @@ class Scheduler:
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
+    def eligible_match(self, tokens) -> Optional[PrefixMatch]:
+        """The ONE definition of a takeable prefix match — shared by
+        admission (below) and the cluster's prefix-affinity dispatch
+        (``ServingEngine.prefix_match_len``), so dispatch can never
+        chase a match admission would refuse: context truncated to the
+        engine's prefill cap, matches below ``prefix_min_tokens``
+        rejected (a 1-token hit still costs a CoW page copy).  Pure
+        peek: no LRU update."""
+        st, ecfg = self.state, self.ecfg
+        if st.prefix is None:
+            return None
+        n = min(len(tokens), ecfg.max_len - 1)
+        m = st.prefix.match(np.asarray(tokens)[:n])
+        return m if m.m >= max(ecfg.prefix_min_tokens, 1) else None
+
+    def plan_admission(self, r: Request, qdepth: int) -> AdmissionPlan:
+        """Page-aware admission policy (the ROADMAP's cost model over
+        free pages, queue depth, and post-match suffix length).
+
+        The request's longest cached prefix is matched first: skipped
+        tokens need no fresh pages (full matched pages are shared;
+        a token-level boundary match costs ONE copy-on-write page), so
+        the *suffix after the match* is what admission must fund —
+        pages for its first chunk now (``first_target``), or, on a full
+        hit, the page its first decode token writes.
+
+        Budget = free pages + reclaimable prefix pages (cache is always
+        cheaper to drop than running work is to preempt), minus the
+        matched pages this very request is about to take off the
+        reclaimable list.  On top of the hard first-chunk need, the
+        policy holds back ``admit_reserve_frac`` of the request's
+        *future* page demand (context + expected output), decayed by
+        queue depth: a shallow queue keeps slack so steady-state decode
+        growth doesn't trigger preemption thrash, a deep queue admits
+        greedily to drain (frac / (1 + qdepth) -> the plain first-chunk
+        gate under backlog).  ``admit_reserve_frac=0`` (default) *is*
+        the plain gate — bit-compatible with the PR-2 scheduler.
+
+        Decisions: ``admit`` (reclaim happens lazily in
+        ``EngineState.activate`` only if the free list alone falls
+        short) or ``defer`` (stay queued; chunked mode scans past).
+        """
+        st, ecfg = self.state, self.ecfg
+        ctx = r.context_tokens()
+        n_ctx = min(len(ctx), ecfg.max_len - 1)
+        match = self.eligible_match(ctx)
+        m = match.m if match else 0
+        if m < n_ctx:
+            first_target = min(m + ecfg.prefill_chunk, n_ctx) \
+                if self.chunked else n_ctx
+        else:
+            # full hit: no prefill — reserve through the first decode
+            # write at position n_ctx
+            first_target = min(n_ctx + 1, ecfg.max_len)
+        shared = len(match.pages) if match else 0
+        need = pages_for(first_target, ecfg.page_size) - shared
+        kv = st.kvman
+        if kv is None:
+            return AdmissionPlan("admit", n_ctx, first_target, match,
+                                 0, 0)
+        # matched pages leave the reclaimable set the moment they are
+        # mapped/pinned — budget against what is left
+        consumed = 0
+        if match:
+            consumed = sum(1 for p in match.pages
+                           if kv.refcount[p] == 0)
+            if match.cow_src is not None \
+                    and kv.refcount[match.cow_src] == 0:
+                consumed += 1
+        budget = kv.num_free + kv.num_reclaimable - consumed
+        hold = 0
+        if ecfg.admit_reserve_frac > 0.0:
+            expected = min(n_ctx + 1 + r.max_new_tokens, ecfg.max_len)
+            future = max(pages_for(expected, ecfg.page_size)
+                         - pages_for(first_target, ecfg.page_size), 0)
+            frac = ecfg.admit_reserve_frac / (1.0 + qdepth)
+            hold = int(np.ceil(frac * future))
+        decision = "admit" if need + hold <= budget else "defer"
+        return AdmissionPlan(decision, n_ctx, first_target, match,
+                             need, budget)
+
     def admit(self) -> list[Request]:
         """Admit waiting requests into free slots.
 
-        Chunked prefill only needs pages for a request's FIRST chunk, so
-        a page-blocked request no longer blocks the whole queue: the
-        scan continues past it and admits any later request that fits
-        (slots stay strictly FCFS — running out of slots stops the
-        scan).  ``prefill_mode="wave"`` needs every context page up
-        front and keeps the seed's strict head-of-line gate.
+        Chunked prefill only needs pages for a request's FIRST chunk
+        *after its longest cached prefix*, so a page-blocked request no
+        longer blocks the whole queue: the scan continues past it and
+        admits any later request whose plan says admit (slots stay
+        strictly FCFS — running out of slots stops the scan).
+        ``prefill_mode="wave"`` needs every context page up front and
+        keeps the seed's strict head-of-line gate.
+
+        A prefix hit commits here: shared pages mapped, LRU touched,
+        the copy-on-write boundary page copied on device *immediately*
+        (before any later admission could evict or recycle the source),
+        and prefill starts at the match point — the skipped tokens
+        never reach chunk planning, the prefill span, or the
+        expert-load EWMA.
         """
-        st, ecfg = self.state, self.ecfg
+        st = self.state
         admitted: list[Request] = []
         if not st.queue or not st.free_slots:
             return admitted
-        remaining: deque[Request] = deque()    # page-blocked, scanned past
+        qdepth = len(st.queue)
+        remaining: deque[Request] = deque()    # deferred, scanned past
         while st.queue and st.free_slots:
             r = st.queue.popleft()
-            n_ctx = min(len(r.context_tokens()), ecfg.max_len - 1)
-            first = min(n_ctx, ecfg.prefill_chunk) if self.chunked \
-                else n_ctx
-            if st.kvman is not None and \
-                    pages_for(first, ecfg.page_size) > st.kvman.num_free:
+            plan = self.plan_admission(r, qdepth)
+            if plan.decision == "defer":
                 remaining.append(r)
                 if not self.chunked:
                     break               # strict FCFS: wait for pages
                 continue
-            st.activate(r, n_ctx, first)
+            if plan.match is not None and st.prefix is not None:
+                st.prefix.touch(plan.match)
+                st.prefix.hits += 1
+            elif st.prefix is not None:
+                st.prefix.misses += 1
+            cow = st.activate(r, plan.n_ctx, plan.first_target,
+                              plan.match)
+            if cow is not None:
+                # the copy is semantically required: a zeroed boundary
+                # page would silently break the hit==cold bit-exactness
+                assert self.copy_pages is not None, (
+                    "prefix-enabled scheduler needs the executor's CoW "
+                    "page copy (copy_pages)")
+                self.copy_pages(*cow)
+                st.kvman.unpin(cow[0])
             admitted.append(r)
             self.slo.admitted(r.rid)
+            if st.prefix is not None:
+                # stamped on EVERY admission (0 on a miss): a hit
+                # request preempted and readmitted cold must land in
+                # the cold TTFT population, not keep a stale hit mark
+                self.slo.prefix_hit(r.rid, r.prefix_hit_tokens)
+                if r.prefix_hit_tokens and not r.prefilling:
+                    # full hit: no prefill span at all — stamp its end
+                    # so decode wait is still attributable
+                    self.slo.prefill_done(r.rid)
         # splice the untouched tail back (skipped requests were earlier
         # in the queue, so relative order is preserved); O(1) when the
         # scan never started
@@ -77,7 +210,9 @@ class Scheduler:
         victim caught *between prefill chunks* releases every page it
         has written so far; readmission recomputes bitwise to the state
         an unpreempted run would have reached (the prefill-phase
-        regression test).  A victim caught mid-DECODE replays
+        regression test) — including a victim holding shared prefix /
+        copy-on-write pages, which simply drops its references and
+        re-matches on readmission.  A victim caught mid-DECODE replays
         prompt+generated as context, which collapses the re-fed
         boundary token the continued run kept at position n_ctx — its
         continuation is correct-by-recompute but not bitwise the
@@ -92,10 +227,12 @@ class Scheduler:
         return True
 
     def reserve(self, targets: list[tuple[Request, int]]):
-        """Grow each target row's page table to cover ``want`` tokens,
-        preempting the youngest other sequences under pool pressure.
-        Oldest targets reserve first; a target that was itself evicted
-        by an earlier reservation is skipped."""
+        """Grow each target row's page table to cover ``want`` tokens.
+        Under pool pressure, reclaim unreferenced prefix-cache pages
+        first (LRU), and only then preempt the youngest other
+        sequences — dropping cache is free, recompute is not.  Oldest
+        targets reserve first; a target that was itself evicted by an
+        earlier reservation is skipped."""
         st = self.state
         if st.kvman is None:
             return
@@ -104,6 +241,11 @@ class Scheduler:
                 continue
             want = min(want, self.ecfg.max_len)
             while not st.kvman.ensure(r.slot, want):
+                short = pages_for(want, self.ecfg.page_size) \
+                    - st.kvman.owned(r.slot) - st.kvman.num_free
+                if st.prefix is not None \
+                        and st.prefix.reclaim(short) > 0:
+                    continue
                 if not self.preempt_one(protect_rid=r.rid):
                     raise RuntimeError(
                         "KV page pool exhausted by a single sequence; "
@@ -117,7 +259,9 @@ class Scheduler:
         up to one ``prefill_chunk`` of its remaining context, FCFS by
         rid, capped globally by ``mixed_prefill_budget`` tokens (0 = no
         cap).  Partial chunks are free — the chunk call has one static
-        shape and masks per-row tails."""
+        shape and masks per-row tails.  Prefix-hit rows enter with
+        ``pos`` already at the match point, so only the suffix is ever
+        planned."""
         budget = self.ecfg.mixed_prefill_budget or None
         work: list[tuple[Request, int]] = []
         for r in sorted(self.state.active.values(), key=lambda r: r.rid):

@@ -20,6 +20,12 @@ Chunked prefill adds two attributions:
     (wave prefill stalls for the whole prompt, chunked prefill for one
     chunk, mixed steps not at all — decode rides in the same call).
 
+The prefix cache adds :meth:`prefix_hit`: context tokens served from
+cached KV pages skip prefill entirely, so the per-request
+``n_prefix_hit`` splits the TTFT population into cached vs cold
+(``ttft_mean_hit`` / ``ttft_mean_cold`` in :meth:`summary`) and
+``prefix_hit_tokens`` counts the prefill work the cache saved.
+
 All timestamps come from an injectable ``clock`` (defaults to
 ``time.perf_counter``), so every derived metric is unit-testable on
 hand-built timelines (tests/test_slo.py).
@@ -51,6 +57,8 @@ class RequestTiming:
     n_prompt: int = 0
     n_generated: int = 0
     n_chunks: int = 0            # prefill chunks run (recompute included)
+    n_prefix_hit: int = 0        # context tokens served from the prefix
+                                 # cache (skipped prefill entirely)
 
     @property
     def ttft(self) -> float:
@@ -110,6 +118,7 @@ class SLOTracker:
         self.queue_depths: list[int] = []
         self.preemptions = 0
         self.stalls: list[tuple[str, float]] = []   # (kind, seconds)
+        self.prefix_hit_tokens_total = 0
         self._t0 = self._clock()
 
     def now(self) -> float:
@@ -140,6 +149,21 @@ class SLOTracker:
 
     def chunk_done(self, rid: int):
         self.timings[rid].n_chunks += 1
+
+    def prefix_hit(self, rid: int, n_tokens: int):
+        """Record that ``n_tokens`` of a request's context were served
+        from the prefix cache at admission (they skip prefill, so the
+        TTFT prefill span covers only the suffix).  Called on EVERY
+        admission of a cache-enabled engine, with 0 on a miss:
+        pre-first-token re-stamps (preempt -> readmit) overwrite — the
+        LAST admission is the one whose prefill span gates the first
+        token, and a cold readmission must reset a stale hit mark;
+        ``prefix_hit_tokens_total`` keeps counting every admission's
+        savings (recompute avoided is real work avoided)."""
+        self.prefix_hit_tokens_total += n_tokens
+        t = self.timings[rid]
+        if t.first_token == 0.0:
+            t.n_prefix_hit = n_tokens
 
     def prefill_done(self, rid: int):
         # pre-first-token re-stamps are correct (a preempted-then-
@@ -218,6 +242,16 @@ class SLOTracker:
             "ttft_decode_wait_mean": float(
                 np.mean([t.decode_wait for t in done])),
             "prefill_chunks": sum(t.n_chunks for t in done),
+            # prefix-cache attribution: cached and cold TTFT separable
+            "prefix_hit_tokens": self.prefix_hit_tokens_total,
+            "prefix_hit_requests": sum(
+                1 for t in done if t.n_prefix_hit > 0),
+            "ttft_mean_hit": float(np.mean(
+                [t.ttft for t in done if t.n_prefix_hit > 0]))
+            if any(t.n_prefix_hit > 0 for t in done) else 0.0,
+            "ttft_mean_cold": float(np.mean(
+                [t.ttft for t in done if t.n_prefix_hit == 0]))
+            if any(t.n_prefix_hit == 0 for t in done) else 0.0,
             "tpot_mean": float(tpots.mean()) if len(tpots) else 0.0,
             "tpot_p50": _pct(tpots, 50),
             "tpot_p90": _pct(tpots, 90),
@@ -288,6 +322,10 @@ def aggregate_cluster_summary(trackers: list[SLOTracker]) -> dict:
         "total_token_throughput": total_tokens / max(wall, 1e-9),
         "total_compiles": sum(s.get("total_compiles", 0) for s in per),
         "preemptions": sum(s.get("preemptions", 0) for s in per),
+        "prefix_hit_tokens": sum(
+            s.get("prefix_hit_tokens", 0) for s in per),
+        "prefix_hit_requests": sum(
+            s.get("prefix_hit_requests", 0) for s in per),
         "decode_steps": sum(s.get("decode_steps", 0) for s in per),
         "requests_per_replica": [s.get("requests", 0) for s in per],
         "replicas": per,

@@ -6,6 +6,13 @@ no policy and no jax.  The scheduler decides *what* to admit, preempt
 or run; the :class:`EngineState` records *who* holds which slot and
 which KV pages, which requests are waiting / active / completed, and
 the expert-load EWMA that drives EPLB rebalancing.
+
+With the prefix cache enabled the state also owns the
+:class:`~repro.serving.prefix.RadixPrefixIndex`: :meth:`activate` maps
+a match's shared pages (and stages the copy-on-write boundary page) and
+:meth:`retire` feeds the finished request's prefilled prefix back into
+the index before its pages are released — so the pages survive,
+refcounted, for the next request that shares them.
 """
 from __future__ import annotations
 
@@ -16,6 +23,7 @@ from typing import Optional
 import numpy as np
 
 from repro.serving.kv import PagedKVManager, pages_for
+from repro.serving.prefix import PrefixMatch, RadixPrefixIndex
 
 
 @dataclasses.dataclass
@@ -30,6 +38,8 @@ class Request:
     done: bool = False
     preempted: int = 0          # times evicted under page pressure
     preempted_in_prefill: int = 0   # of those, evictions between chunks
+    admit_pos: int = 0          # pos at admission (prefix-hit start)
+    prefix_hit_tokens: int = 0  # cached tokens skipped (this admission)
 
     def context_tokens(self) -> np.ndarray:
         """Tokens to (re)prefill: the prompt plus anything generated
@@ -57,7 +67,8 @@ class EngineState:
     # long-running engine doesn't grow it without limit
     HIST_LOG_CAP = 8192
 
-    def __init__(self, ecfg, num_experts: int):
+    def __init__(self, ecfg, num_experts: int,
+                 prefix_enabled: bool = False):
         self.ecfg = ecfg
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}
@@ -75,6 +86,9 @@ class EngineState:
                 max_pages_per_seq=pmax, max_seqs=ecfg.max_batch)
         else:
             self.kvman = None
+        self.prefix: Optional[RadixPrefixIndex] = (
+            RadixPrefixIndex(self.kvman, ecfg.page_size)
+            if prefix_enabled and self.kvman is not None else None)
 
     # ------------------------------------------------------------------
     @property
@@ -106,20 +120,58 @@ class EngineState:
         self.queue.append(r)
         return r
 
-    def activate(self, r: Request, n_ctx: int, first_chunk: int):
-        """Give ``r`` a slot and pages for its first chunk (the caller
-        checked they are available)."""
+    def activate(self, r: Request, n_ctx: int, first_target: int,
+                 match: Optional[PrefixMatch] = None
+                 ) -> Optional[tuple[int, int]]:
+        """Give ``r`` a slot and pages covering ``first_target`` tokens
+        (the scheduler verified the budget).
+
+        With a prefix ``match``: the matched full pages are mapped
+        shared (read-only — prefill starts at ``match.m``, above them),
+        the copy-on-write source is pinned, any shortfall beyond the
+        free list is reclaimed from the index (the match's own pages
+        are already refcounted, so reclaim can never touch them), and
+        the freshly-allocated boundary page is returned as a
+        ``(src, dst, keep)`` device-copy (keep = matched tokens inside
+        the boundary page) the scheduler must run — and unpin — before
+        the request's first step."""
         r.slot = self.free_slots.pop()
         r.n_ctx = n_ctx
         r.pos = 0
+        r.admit_pos = 0
+        r.prefix_hit_tokens = 0
+        cow: Optional[tuple[int, int]] = None
         if self.kvman is not None:
-            ok = self.kvman.ensure(r.slot, first_chunk)
+            if match is not None and match.hit:
+                r.pos = r.admit_pos = match.m
+                r.prefix_hit_tokens = match.m
+                self.kvman.map_shared(r.slot, match.pages)
+                if match.cow_src is not None:
+                    self.kvman.pin(match.cow_src)
+            need = pages_for(first_target, self.ecfg.page_size) \
+                - self.kvman.owned(r.slot)
+            short = need - self.kvman.num_free
+            if short > 0 and self.prefix is not None:
+                self.prefix.reclaim(short)
+            ok = self.kvman.ensure(r.slot, first_target)
             assert ok, "admission page reservation failed"
+            if match is not None and match.cow_src is not None:
+                dst = int(self.kvman.page_table[r.slot, len(match.pages)])
+                keep = match.m - len(match.pages) * self.ecfg.page_size
+                cow = (int(match.cow_src), dst, keep)
         self.active[r.rid] = r
+        return cow
 
     def retire(self, r: Request):
-        """Release a finished request's slot and pages."""
+        """Release a finished request's slot and pages — after feeding
+        its prefilled prefix to the prefix index (content-deduplicated;
+        the indexed pages survive the release, refcounted)."""
         r.done = True
+        if self.prefix is not None and r.n_ctx > 0:
+            npg = pages_for(r.n_ctx, self.ecfg.page_size)
+            pages = [int(self.kvman.page_table[r.slot, i])
+                     for i in range(npg)]
+            self.prefix.insert(r.context_tokens()[:r.n_ctx], pages)
         self.free_slots.append(r.slot)
         if self.kvman is not None:
             self.kvman.release(r.slot)
@@ -127,13 +179,16 @@ class EngineState:
         del self.active[r.rid]
 
     def evict(self, v: Request):
-        """Requeue a preempted request for recompute-on-readmission."""
+        """Requeue a preempted request for recompute-on-readmission.
+        Shared prefix pages just drop one reference; the victim's
+        private (suffix / copy-on-write) pages go back to the pool."""
         if v.prefilling:
             v.preempted_in_prefill += 1
         self.kvman.release(v.slot)
         self.free_slots.append(v.slot)
         del self.active[v.rid]
         v.slot, v.pos, v.n_ctx, v.preempted = -1, 0, 0, v.preempted + 1
+        v.admit_pos, v.prefix_hit_tokens = 0, 0
         self.queue.appendleft(v)
 
     # ------------------------------------------------------------------

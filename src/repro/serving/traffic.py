@@ -11,6 +11,12 @@ hand-fed prompts.  This module provides the load side:
     heavy-tail mixture (a fraction of "long" requests drawn at
     ``tail_scale``× the mean — the bimodality that makes batch
     composition, and therefore activated-expert counts, fluctuate).
+    With ``prefix_groups > 0`` the trace becomes a shared-system-prompt
+    / multi-turn stream (every prompt = prefix + fresh suffix;
+    ``prefix_fraction`` sweeps how much of the stream is *shared*
+    without changing total prompt work — the prefix-cache benchmark's
+    controlled variable; ``turns_max > 1`` adds session chains whose
+    prompts extend earlier prompts).
   * :func:`replay_open_loop` — arrivals happen at trace times on a
     virtual clock regardless of engine progress (rate-controlled load;
     queues grow when the engine falls behind — this is the regime where
@@ -56,6 +62,30 @@ class TrafficConfig:
     tail_scale: float = 4.0         # their length multiplier
     vocab_size: int = 256
     seed: int = 0
+    # --- shared-prefix / multi-turn workload (prefix_groups=0 = off:
+    #     generation is bit-identical to pre-prefix configs) ---
+    prefix_groups: int = 0          # distinct shared "system prompts"
+    prefix_len_mean: float = 24.0
+    prefix_len_sigma: float = 0.3
+    prefix_len_min: int = 8
+    prefix_len_max: int = 64
+    prefix_fraction: float = 1.0    # share of requests drawing a SHARED
+                                    # group prefix; the rest get a
+                                    # private prefix of the SAME length
+                                    # (total prompt work is invariant to
+                                    # the fraction — only *sharing*
+                                    # varies, which is what a prefix-
+                                    # cache sweep must isolate)
+    turns_max: int = 1              # >1: multi-turn sessions — a later
+                                    # request's prompt extends an earlier
+                                    # prompt with a fresh user turn
+                                    # (prompt-prefix chains)
+    turn_continue_p: float = 0.5    # P(a request continues an open
+                                    # session) when turns_max > 1
+    prompt_total_max: int = 0       # cap on a chained prompt's length
+                                    # (0 = prefix_len_max + turns_max *
+                                    # prompt_len_max); a session that
+                                    # would exceed it starts fresh
 
 
 def _lengths(rng, n, mean, sigma, lo, hi, tail_fraction, tail_scale):
@@ -94,6 +124,8 @@ def generate_trace(tcfg: TrafficConfig) -> list[SyntheticRequest]:
     o_lens = _lengths(rng, n, tcfg.output_len_mean, tcfg.output_len_sigma,
                       tcfg.output_len_min, tcfg.output_len_max,
                       tcfg.tail_fraction, tcfg.tail_scale)
+    if tcfg.prefix_groups > 0:
+        return _shared_prefix_trace(tcfg, rng, arrivals, p_lens, o_lens)
     return [
         SyntheticRequest(
             arrival=float(arrivals[i]),
@@ -102,6 +134,66 @@ def generate_trace(tcfg: TrafficConfig) -> list[SyntheticRequest]:
             max_new_tokens=int(o_lens[i]))
         for i in range(n)
     ]
+
+
+def _shared_prefix_trace(tcfg: TrafficConfig, rng, arrivals, p_lens,
+                         o_lens) -> list[SyntheticRequest]:
+    """Shared-system-prompt / multi-turn request stream.
+
+    Every request is ``prefix + fresh user suffix``.  The prefix is one
+    of ``prefix_groups`` shared system prompts with probability
+    ``prefix_fraction``, else a *private* prefix of the same group's
+    length — so sweeping ``prefix_fraction`` changes only how much of
+    the stream is SHARED, never how many prompt tokens the engine must
+    hold, which is exactly the controlled variable a prefix-cache
+    benchmark needs.  The RNG consumption schedule is also independent
+    of ``prefix_fraction`` (shared/private both draw the private
+    tokens), so two sweeps differ in nothing but sharing.
+
+    With ``turns_max > 1``, a request may instead continue an open
+    session: its prompt is a previous request's full prompt plus a new
+    user turn — the prompt-prefix chains a multi-turn chat produces,
+    and the deepest reuse a radix prefix cache can exploit.
+    """
+    n = tcfg.num_requests
+    g_lens = _lengths(rng, tcfg.prefix_groups, tcfg.prefix_len_mean,
+                      tcfg.prefix_len_sigma, tcfg.prefix_len_min,
+                      tcfg.prefix_len_max, 0.0, 1.0)
+    g_toks = [rng.integers(0, tcfg.vocab_size, int(gl), dtype=np.int64)
+              .astype(np.int32) for gl in g_lens]
+    total_cap = tcfg.prompt_total_max or (
+        tcfg.prefix_len_max + tcfg.turns_max * tcfg.prompt_len_max)
+    # draw the whole decision/token stream up front so consumption
+    # never depends on the branch taken
+    shared = rng.random(n) < tcfg.prefix_fraction
+    groups = rng.integers(0, tcfg.prefix_groups, size=n)
+    cont = rng.random(n) < tcfg.turn_continue_p
+    priv = [rng.integers(0, tcfg.vocab_size, int(g_lens[groups[i]]),
+                         dtype=np.int64).astype(np.int32)
+            for i in range(n)]
+    sess_pick = rng.integers(0, 1 << 30, size=n)
+    sessions: list[tuple[np.ndarray, int]] = []   # (prompt, turns)
+    out = []
+    for i in range(n):
+        suffix = rng.integers(0, tcfg.vocab_size, int(p_lens[i]),
+                              dtype=np.int64).astype(np.int32)
+        prompt = None
+        if tcfg.turns_max > 1 and sessions and cont[i]:
+            j = int(sess_pick[i] % len(sessions))
+            prev, turns = sessions[j]
+            if (turns < tcfg.turns_max
+                    and len(prev) + len(suffix) <= total_cap):
+                prompt = np.concatenate([prev, suffix])
+                sessions[j] = (prompt, turns + 1)
+        if prompt is None:
+            prefix = g_toks[groups[i]] if shared[i] else priv[i]
+            prompt = np.concatenate([prefix, suffix])
+            if tcfg.turns_max > 1:
+                sessions.append((prompt, 1))
+        out.append(SyntheticRequest(
+            arrival=float(arrivals[i]), prompt=prompt,
+            max_new_tokens=int(o_lens[i])))
+    return out
 
 
 def replay_open_loop(engine, trace: list[SyntheticRequest], *,

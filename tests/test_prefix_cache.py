@@ -1,0 +1,883 @@
+"""Shared-prefix KV cache lockdown: radix index, refcounted/CoW pages,
+page-aware admission, and the bit-exact hit == cold equivalence.
+
+The subsystem's one non-negotiable claim: serving a request through a
+prefix hit changes *nothing* observable about that request — generated
+tokens AND the logical KV its pages hold are bitwise identical to the
+same request served cold, for every supported mixer type (full
+attention and SWA; mamba-bearing archs auto-disable, their SSM state is
+not paged), including after preemption/recompute while the request
+holds shared + copy-on-write pages.  KV content for a (token sequence,
+position) is deterministic — independent of batch composition, chunk
+split, and physical page id — which is what makes reuse and
+content-dedup safe; these tests pin it end to end.
+
+Fast half: allocator refcount/pin/index mechanics, the radix index
+(match/insert/dedup/partial-tail/LRU eviction), a hypothesis fuzz of
+the admit/share/release/evict lifecycle with ``check_consistent`` after
+every op, SLO prefix attribution, shared-prefix traffic generation, and
+the fp8-vs-fp32 paged-attention parity (tolerance-based).
+
+Slow half: engine-level equivalences (jit full model steps).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import build_placement, slots_for_ratio
+from repro.models import init_lm
+from repro.models import layers as L
+from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                           PagedKVManager, RadixPrefixIndex,
+                           ServingEngine, SLOTracker, TrafficConfig,
+                           generate_trace)
+from repro.serving.kv import pages_for
+from repro.sharding.policy import make_dist
+
+PS = 4
+
+
+def _man(num_pages=16, max_seqs=4, mpps=8):
+    return PagedKVManager(num_pages=num_pages, page_size=PS,
+                          max_pages_per_seq=mpps, max_seqs=max_seqs)
+
+
+# ======================================================================
+# fast: allocator sharing mechanics
+# ======================================================================
+
+
+@pytest.mark.fast
+class TestManagerSharing:
+    def test_map_shared_refcounts_and_release_order(self):
+        m = _man()
+        assert m.ensure(0, 9)               # 3 pages, refcount 1 each
+        pages = [int(p) for p in m.page_table[0, :3]]
+        m.map_shared(1, pages[:2])          # slot 1 shares 2 of them
+        assert (m.refcount[pages[:2]] == 2).all()
+        assert m.refcount[pages[2]] == 1
+        m.check_consistent()
+        # releasing the original keeps the shared pages alive
+        freed = m.release(0)
+        assert freed == 1                   # only the unshared page
+        assert (m.refcount[pages[:2]] == 1).all()
+        m.check_consistent()
+        assert m.release(1) == 2
+        assert m.num_free == m.num_pages
+        m.check_consistent()
+
+    def test_indexed_pages_survive_release_and_unindex_frees(self):
+        m = _man()
+        assert m.ensure(0, 8)
+        pages = [int(p) for p in m.page_table[0, :2]]
+        for p in pages:
+            m.index_page(p)
+        assert m.release(0) == 0            # index holds both
+        assert m.num_reclaimable == 2
+        m.check_consistent()
+        assert m.unindex_page(pages[0])     # goes free now
+        assert m.num_free == m.num_pages - 1
+        m.check_consistent()
+
+    def test_pin_blocks_free_until_unpin(self):
+        m = _man()
+        assert m.ensure(0, 4)
+        p = int(m.page_table[0, 0])
+        m.index_page(p)
+        m.pin(p)
+        m.release(0)
+        assert not m.unindex_page(p)        # pinned: stays off free list
+        assert m.num_reclaimable == 0
+        m.check_consistent()
+        m.unpin(p)                          # last reference drops
+        assert m.num_free == m.num_pages
+        m.check_consistent()
+
+    def test_shared_growth_allocates_private_tail(self):
+        """A slot seeded with shared pages grows with fresh pages above
+        them (ensure never touches the shared prefix)."""
+        m = _man()
+        assert m.ensure(0, 8)
+        shared = [int(p) for p in m.page_table[0, :2]]
+        for p in shared:
+            m.index_page(p)
+        m.release(0)
+        m.map_shared(1, shared)
+        assert m.ensure(1, 16)              # 2 shared + 2 private
+        tail = [int(p) for p in m.page_table[1, 2:4]]
+        assert not set(tail) & set(shared)
+        assert (m.refcount[tail] == 1).all()
+        m.check_consistent()
+
+    def test_check_consistent_catches_refcount_drift(self):
+        m = _man()
+        assert m.ensure(0, 4)
+        m.refcount[int(m.page_table[0, 0])] += 1
+        with pytest.raises(AssertionError):
+            m.check_consistent()
+
+
+# ======================================================================
+# fast: radix index
+# ======================================================================
+
+
+def _serve_and_insert(man, idx, tokens, slot):
+    """Mimic one admission+retire lifecycle at the bookkeeping level:
+    match, share, CoW-pin, allocate the suffix, insert, release."""
+    tokens = np.asarray(tokens)
+    match = idx.match(tokens)
+    idx.touch(match)
+    man.map_shared(slot, match.pages)
+    if match.cow_src is not None:
+        man.pin(match.cow_src)
+    need = pages_for(len(tokens), PS) - man.owned(slot)
+    if need > man.num_free:
+        idx.reclaim(need - man.num_free)
+    ok = man.ensure(slot, len(tokens))
+    if match.cow_src is not None:
+        man.unpin(match.cow_src)
+    if not ok:                              # pool genuinely too small
+        man.release(slot)
+        return None
+    pages = [int(man.page_table[slot, i])
+             for i in range(pages_for(len(tokens), PS))]
+    idx.insert(tokens, pages)
+    man.release(slot)
+    return match
+
+
+@pytest.mark.fast
+class TestRadixIndex:
+    def _fresh(self, num_pages=32):
+        man = _man(num_pages=num_pages, max_seqs=4, mpps=num_pages)
+        return man, RadixPrefixIndex(man, PS)
+
+    def test_exact_reinsert_dedupes_everything(self):
+        man, idx = self._fresh()
+        seq = np.arange(10) % 7
+        _serve_and_insert(man, idx, seq, 0)
+        before = idx.cached_pages()
+        m = _serve_and_insert(man, idx, seq, 1)
+        assert m.m == 10                    # full hit (partial tail CoW)
+        assert m.cow_src is not None        # 10 % 4 != 0
+        assert len(m.pages) == 2
+        assert idx.cached_pages() == before  # nothing new indexed
+        idx.check_consistent(), man.check_consistent()
+
+    def test_page_aligned_match_has_no_cow(self):
+        man, idx = self._fresh()
+        seq = np.arange(8)
+        _serve_and_insert(man, idx, seq, 0)
+        m = idx.match(np.concatenate([seq, [99, 98]]))
+        assert m.m == 8 and m.cow_src is None and len(m.pages) == 2
+
+    def test_token_level_partial_match_inside_a_page(self):
+        man, idx = self._fresh()
+        seq = np.array([1, 2, 3, 4, 5, 6, 7, 8])
+        _serve_and_insert(man, idx, seq, 0)
+        m = idx.match(np.array([1, 2, 3, 4, 5, 6, 99, 98]))
+        assert m.m == 6                     # 4 full + 2 into page 2
+        assert len(m.pages) == 1 and m.cow_src is not None
+
+    def test_divergent_siblings_and_best_match(self):
+        man, idx = self._fresh()
+        a = np.array([1, 2, 3, 4, 10, 11, 12, 13])
+        b = np.array([1, 2, 3, 4, 10, 11, 77, 88])
+        _serve_and_insert(man, idx, a, 0)
+        mb = _serve_and_insert(man, idx, b, 1)
+        assert mb.m == 6                    # shared page + 2 tokens CoW
+        # now both second pages are cached as siblings; the better one
+        # wins for each probe
+        assert idx.match(a).m == 8
+        assert idx.match(b).m == 8
+        assert idx.match(np.array([1, 2, 3, 4, 10, 11, 77, 0])).m == 7
+        idx.check_consistent()
+
+    def test_shorter_reinsert_is_subsumed_by_longer(self):
+        """Retiring a short request whose tail is a strict prefix of an
+        already-cached longer page must not pin a redundant page (the
+        longer node serves every match the short one could)."""
+        man, idx = self._fresh()
+        long = np.array([5, 6, 7, 8, 9, 10, 11, 12])
+        _serve_and_insert(man, idx, long, 0)
+        assert idx.cached_pages() == 2
+        _serve_and_insert(man, idx, long[:6], 1)    # tail = [9, 10]
+        assert idx.cached_pages() == 2              # nothing new pinned
+        assert idx.match(long[:6]).m == 6           # still fully served
+        idx.check_consistent(), man.check_consistent()
+
+    def test_longer_insert_subsumes_partial_tail(self):
+        man, idx = self._fresh()
+        short = np.array([5, 6, 7, 8, 9, 10])        # partial tail of 2
+        _serve_and_insert(man, idx, short, 0)
+        assert idx.cached_pages() == 2
+        longer = np.array([5, 6, 7, 8, 9, 10, 11, 12])
+        _serve_and_insert(man, idx, longer, 1)
+        # the 2-token partial leaf was subsumed by the full page
+        assert idx.cached_pages() == 2
+        assert idx.match(longer).m == 8
+        idx.check_consistent(), man.check_consistent()
+
+    def test_lru_reclaim_evicts_oldest_leaf_first(self):
+        man, idx = self._fresh()
+        a = np.array([1, 1, 1, 1, 2, 2])
+        b = np.array([3, 3, 3, 3, 4, 4])
+        _serve_and_insert(man, idx, a, 0)
+        _serve_and_insert(man, idx, b, 1)
+        idx.touch(idx.match(a))             # a is now more recent
+        assert idx.reclaim(1) == 1
+        assert idx.match(b).m < 6           # b's tail died first
+        assert idx.match(a).m == 6
+        idx.check_consistent(), man.check_consistent()
+
+    def test_reclaim_skips_pages_shared_by_active_slots(self):
+        man, idx = self._fresh()
+        seq = np.arange(8)
+        _serve_and_insert(man, idx, seq, 0)
+        m = idx.match(seq)
+        man.map_shared(2, m.pages)          # an active request shares
+        assert idx.reclaim(10) == 0         # nothing evictable
+        assert idx.match(seq).m == 8
+        man.release(2)
+        assert idx.reclaim(10) == 2         # now both go
+        assert idx.match(seq).m == 0
+        idx.check_consistent(), man.check_consistent()
+
+
+# ======================================================================
+# fast: hypothesis fuzz of the admit/share/release/evict lifecycle
+# ======================================================================
+
+
+@pytest.mark.fast
+class TestRefcountFuzz:
+    def test_lifecycle_invariants_hold_under_random_ops(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @given(st.data())
+        @settings(deadline=None)
+        def prop(data):
+            man = _man(num_pages=12, max_seqs=3, mpps=12)
+            idx = RadixPrefixIndex(man, PS)
+            live = []                       # slots mid-lifecycle
+            n_ops = data.draw(st.integers(5, 40))
+            for _ in range(n_ops):
+                free_slots = [s for s in range(3) if s not in live]
+                ops = ["serve", "reclaim"]
+                if free_slots:
+                    ops.append("admit")
+                if live:
+                    ops.append("drop")
+                op = data.draw(st.sampled_from(ops))
+                if op == "serve" and free_slots:
+                    # full lifecycle in one go (admission -> retire)
+                    n = data.draw(st.integers(1, 16))
+                    seq = data.draw(st.lists(st.integers(0, 3),
+                                             min_size=n, max_size=n))
+                    _serve_and_insert(man, idx, np.asarray(seq),
+                                      free_slots[0])
+                elif op == "admit" and free_slots:
+                    # admission that stays active (holds refs)
+                    n = data.draw(st.integers(1, 12))
+                    seq = np.asarray(data.draw(st.lists(
+                        st.integers(0, 3), min_size=n, max_size=n)))
+                    s = free_slots[0]
+                    m = idx.match(seq)
+                    man.map_shared(s, m.pages)
+                    need = pages_for(n, PS) - man.owned(s)
+                    if need > man.num_free:
+                        idx.reclaim(need - man.num_free)
+                    if man.ensure(s, n):
+                        live.append(s)
+                    else:
+                        man.release(s)
+                elif op == "drop" and live:
+                    man.release(live.pop(
+                        data.draw(st.integers(0, len(live) - 1))))
+                elif op == "reclaim":
+                    idx.reclaim(data.draw(st.integers(1, 6)))
+                man.check_consistent()
+                idx.check_consistent()
+            # full teardown drains everything
+            for s in live:
+                man.release(s)
+            idx.reclaim(man.num_pages)
+            assert man.num_free == man.num_pages
+            man.check_consistent(), idx.check_consistent()
+
+        prop()
+
+
+# ======================================================================
+# fast: SLO prefix attribution
+# ======================================================================
+
+
+@pytest.mark.fast
+class TestSLOPrefixAttribution:
+    def test_hit_and_cold_ttft_separable(self):
+        class Clock:
+            t = 0.0
+
+            def __call__(self):
+                return self.t
+
+        clk = Clock()
+        slo = SLOTracker(clock=clk)
+        slo.arrive(0, 20)                   # cold request
+        slo.arrive(1, 20)                   # cached request
+        slo.admitted(0), slo.admitted(1)
+        slo.prefix_hit(1, 16)
+        clk.t = 2.0
+        slo.first_token(0)
+        clk.t = 0.5
+        slo.first_token(1)
+        slo.finish(0), slo.finish(1)
+        s = slo.summary()
+        assert s["prefix_hit_tokens"] == 16
+        assert s["prefix_hit_requests"] == 1
+        assert s["ttft_mean_cold"] == pytest.approx(2.0)
+        assert s["ttft_mean_hit"] == pytest.approx(0.5)
+
+    def test_recompute_hits_count_tokens_but_keep_first_attribution(self):
+        t = [0.0]
+        slo = SLOTracker(clock=lambda: t[0])
+        slo.arrive(0, 8)
+        slo.prefix_hit(0, 8)
+        t[0] = 1.0
+        slo.first_token(0)
+        slo.prefix_hit(0, 5)        # post-first-token readmission
+        t[0] = 2.0
+        slo.finish(0)
+        s = slo.summary()
+        assert s["prefix_hit_tokens"] == 13     # savings both times
+        assert slo.timings[0].n_prefix_hit == 8  # TTFT split frozen
+
+    def test_cold_readmission_resets_the_hit_split(self):
+        """Hit, preempted, readmitted COLD (cache since evicted): the
+        request must land in the cold TTFT population — the scheduler
+        stamps prefix_hit(0) on every cache-enabled admission."""
+        t = [0.0]
+        slo = SLOTracker(clock=lambda: t[0])
+        slo.arrive(0, 8)
+        slo.prefix_hit(0, 8)        # first admission: hit
+        slo.prefix_hit(0, 0)        # readmission: miss, pre-first-token
+        t[0] = 1.0
+        slo.first_token(0)
+        t[0] = 2.0
+        slo.finish(0)
+        s = slo.summary()
+        assert s["prefix_hit_tokens"] == 8      # the avoided work was real
+        assert s["prefix_hit_requests"] == 0    # but TTFT counts as cold
+        assert s["ttft_mean_cold"] == pytest.approx(1.0)
+
+
+# ======================================================================
+# fast: shared-prefix traffic generation
+# ======================================================================
+
+
+@pytest.mark.fast
+class TestSharedPrefixTraffic:
+    def test_fraction_sweep_changes_only_sharing(self):
+        """The controlled variable: prefix_fraction must not move
+        arrivals, prompt lengths, or output lengths — only whether the
+        prefix tokens are shared."""
+        base = TrafficConfig(num_requests=40, prefix_groups=2, seed=3)
+        t0 = generate_trace(
+            base.__class__(**{**base.__dict__, "prefix_fraction": 0.0}))
+        t1 = generate_trace(
+            base.__class__(**{**base.__dict__, "prefix_fraction": 1.0}))
+        assert [r.arrival for r in t0] == [r.arrival for r in t1]
+        assert [len(r.prompt) for r in t0] == [len(r.prompt) for r in t1]
+        assert [r.max_new_tokens for r in t0] == \
+            [r.max_new_tokens for r in t1]
+        # full sharing: every prompt starts with one of 2 group prefixes
+        firsts = {tuple(r.prompt[:8]) for r in t1}
+        assert len(firsts) <= 2
+        # no sharing: private prefixes are (overwhelmingly) distinct
+        assert len({tuple(r.prompt[:8]) for r in t0}) > 10
+
+    def test_multi_turn_chains_are_prompt_prefixes(self):
+        tcfg = TrafficConfig(num_requests=40, prefix_groups=2,
+                             turns_max=3, turn_continue_p=0.7, seed=5)
+        trace = generate_trace(tcfg)
+        chains = 0
+        for j in range(len(trace)):
+            for i in range(j):
+                pi, pj = trace[i].prompt, trace[j].prompt
+                if len(pj) > len(pi) and (pj[:len(pi)] == pi).all():
+                    chains += 1
+                    break
+        assert chains > 0
+
+    def test_off_switch_is_bit_identical(self):
+        a = generate_trace(TrafficConfig(num_requests=16, seed=9))
+        b = generate_trace(TrafficConfig(num_requests=16, seed=9,
+                                         prefix_len_mean=99.0))
+        assert all((x.prompt == y.prompt).all()
+                   and x.arrival == y.arrival for x, y in zip(a, b))
+
+
+# ======================================================================
+# fast: fp8 KV pool parity (op level, tolerance-based)
+# ======================================================================
+
+
+@pytest.mark.fast
+class TestFp8PagedParity:
+    def test_decode_fp8_pool_matches_fp32_pool(self):
+        cfg = get_config("mixtral-8x22b").reduced()
+        dims = L.attn_dims(cfg, 4)
+        rng = np.random.default_rng(0)
+        params = L.init_attention(cfg, jax.random.PRNGKey(0), tp=4)
+        b, ps, pmax = 2, 8, 3
+        num_pages = b * pmax
+        x = jnp.asarray(rng.normal(size=(b, 1, cfg.d_model)) * 0.3,
+                        jnp.float32)
+        k_pool = rng.normal(size=(num_pages, ps, dims.kv,
+                                  dims.head_dim)).astype(np.float32) * 0.3
+        v_pool = rng.normal(size=k_pool.shape).astype(np.float32) * 0.3
+        pt = np.arange(num_pages, dtype=np.int32).reshape(b, pmax)
+        pos = jnp.asarray([13, 20], jnp.int32)
+        outs = {}
+        for name, dt in (("fp32", jnp.float32),
+                         ("fp8", jnp.float8_e4m3fn)):
+            cache = {"k": jnp.asarray(k_pool).astype(dt),
+                     "v": jnp.asarray(v_pool).astype(dt)}
+            o, _ = L.attention_decode_paged(
+                cfg, params, x, cache, jnp.asarray(pt), pos, dims=dims)
+            outs[name] = np.asarray(o, np.float32)
+        scale = np.abs(outs["fp32"]).max()
+        assert np.abs(outs["fp8"] - outs["fp32"]).max() < 0.25 * scale
+        # and they are genuinely close in aggregate
+        assert np.abs(outs["fp8"] - outs["fp32"]).mean() < 0.05 * scale
+
+
+# ======================================================================
+# slow: engine-level equivalence
+# ======================================================================
+
+
+_SETUP_CACHE: dict = {}
+
+
+def _setup(name):
+    if name not in _SETUP_CACHE:
+        cfg = get_config(name).reduced()
+        ep = 4
+        spd = slots_for_ratio(cfg.num_experts, ep, 1.25) \
+            if cfg.is_moe else 1
+        dist = make_dist(None, ep_size=ep, slots_per_device=spd)
+        placement = (build_placement(cfg.num_experts, ep, spd)
+                     if cfg.is_moe else None)
+        params = init_lm(cfg, jax.random.PRNGKey(0), dist,
+                         replica_expert=placement.replica_expert
+                         if placement else None)
+        _SETUP_CACHE[name] = (cfg, dist, params)
+    return _SETUP_CACHE[name]
+
+
+def _engine(name, **kw):
+    cfg, dist, params = _setup(name)
+    ecfg = EngineConfig(**{"max_batch": 4, "max_len": 64, "page_size": 8,
+                           "prefill_chunk": 8, "rebalance_every": 0,
+                           **kw})
+    return cfg, ServingEngine(cfg, dist, params, ecfg)
+
+
+def _logical_kv(eng, slot, n_pages):
+    """A request's logical KV content, gathered page-table order —
+    physical page ids are scheduling, content is semantics."""
+    pt = eng.kvman.page_table[slot]
+    out = []
+    for li, pool in eng.cache.items():
+        if "conv" in pool:
+            continue
+        for key in ("k", "v"):
+            arr = np.asarray(pool[key])
+            for lp in pt[:n_pages]:
+                assert lp >= 0
+                out.append(arr[:, lp])
+    return out
+
+
+# the two attention mixer families the prefix cache supports: pure
+# full-attention MoE and the SWA+full interleave
+ARCHS = ["mixtral-8x22b", "gemma3-12b"]
+
+
+@pytest.mark.slow
+class TestHitEqualsCold:
+    @pytest.mark.parametrize("name", ARCHS)
+    def test_identical_prompt_full_hit_bitexact(self, name):
+        """Second serving of an identical prompt: full-context hit (no
+        prefill at all), tokens AND logical KV bitwise equal to cold."""
+        cfg, cold = _engine(name)
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab_size, 19)
+
+        def run_and_capture(eng, gen=6):
+            rid = eng.submit(prompt, gen)
+            # step until the request has produced 2 tokens, capture its
+            # logical KV mid-flight (pages are released at retire)
+            while True:
+                req = eng.active.get(rid)
+                if req is not None and len(req.generated) >= 2:
+                    break
+                eng.step()
+            r = eng.active[rid]
+            kv = _logical_kv(eng, r.slot, pages_for(r.n_ctx, 8))
+            eng.run()
+            return tuple(eng.completed[rid].generated), kv
+
+        toks_cold, kv_cold = run_and_capture(cold)
+
+        _, warm = _engine(name, enable_prefix_cache=True)
+        assert warm.prefix_enabled
+        warm.submit(prompt, 6)
+        warm.run()
+        toks_first = tuple(warm.completed[0].generated)
+        toks_hit, kv_hit = run_and_capture(warm)
+        r2 = warm.completed[1]
+        assert r2.prefix_hit_tokens == 19       # full-context hit
+        assert toks_first == toks_cold
+        assert toks_hit == toks_cold
+        assert len(kv_hit) == len(kv_cold) > 0
+        for a, b in zip(kv_hit, kv_cold):
+            np.testing.assert_array_equal(a, b)
+        warm.kvman.check_consistent()
+        warm.prefix_index.check_consistent()
+
+    @pytest.mark.parametrize("name", ARCHS)
+    def test_extended_prompt_partial_hit_bitexact(self, name):
+        """Multi-turn shape: new prompt extends a cached one — full
+        shared pages + one token-level CoW boundary page."""
+        cfg, cold = _engine(name)
+        rng = np.random.default_rng(1)
+        head = rng.integers(0, cfg.vocab_size, 19)      # 19 % 8 != 0
+        full = np.concatenate([head,
+                               rng.integers(0, cfg.vocab_size, 14)])
+        cold.submit(full, 6)
+        cold.run()
+        toks_cold = tuple(cold.completed[0].generated)
+
+        _, warm = _engine(name, enable_prefix_cache=True)
+        warm.submit(head, 4)
+        warm.run()
+        rid = warm.submit(full, 6)
+        warm.run()
+        r = warm.completed[rid]
+        assert r.prefix_hit_tokens == 19        # head fully reused
+        assert tuple(r.generated) == toks_cold
+        warm.kvman.check_consistent()
+        warm.prefix_index.check_consistent()
+
+    def test_shorter_prompt_mid_page_hit_bitexact(self):
+        """Prompt that ends inside a cached page: every matched token
+        comes through the CoW copy."""
+        cfg, cold = _engine("mixtral-8x22b")
+        rng = np.random.default_rng(2)
+        long = rng.integers(0, cfg.vocab_size, 30)
+        short = long[:11]                       # mid-page (11 % 8 != 0)
+        cold.submit(short, 6)
+        cold.run()
+        toks_cold = tuple(cold.completed[0].generated)
+
+        _, warm = _engine("mixtral-8x22b", enable_prefix_cache=True)
+        warm.submit(long, 4)
+        warm.run()
+        rid = warm.submit(short, 6)
+        warm.run()
+        r = warm.completed[rid]
+        assert r.prefix_hit_tokens == 11
+        assert tuple(r.generated) == toks_cold
+
+    @pytest.mark.parametrize("algo", ["metro", "eplb"])
+    def test_staggered_mixed_trace_on_equals_off(self, algo):
+        """Hits admitted while other rows decode (mixed steps): every
+        request's tokens are identical with the cache on and off — the
+        cache changes scheduling and memory, never numerics."""
+        cfg, _ = _engine("mixtral-8x22b")
+        rng = np.random.default_rng(3)
+        sys_p = rng.integers(0, cfg.vocab_size, 17)
+        prompts = []
+        for i in range(6):
+            sfx = rng.integers(0, cfg.vocab_size, 5 + 3 * i)
+            prompts.append(np.concatenate([sys_p, sfx])
+                           if i % 2 == 0 else sfx)
+
+        def serve(**kw):
+            _, e = _engine("mixtral-8x22b", decode_algo=algo, **kw)
+            it = iter(prompts)
+            e.submit(next(it), 6)
+            k = 0
+            while e.has_work:
+                e.step()
+                k += 1
+                if k % 2 == 0:
+                    nxt = next(it, None)
+                    if nxt is not None:
+                        e.submit(nxt, 6)
+            for nxt in it:
+                e.submit(nxt, 6)
+                e.run()
+            return e
+
+        off = serve()
+        on = serve(enable_prefix_cache=True)
+        assert len(on.completed) == len(prompts)
+        for rid in off.completed:
+            assert tuple(on.completed[rid].generated) == \
+                tuple(off.completed[rid].generated)
+        assert on.slo.summary()["prefix_hit_tokens"] > 0
+        on.kvman.check_consistent()
+        on.prefix_index.check_consistent()
+
+    def test_mamba_archs_auto_disable_and_still_serve(self):
+        for name in ("falcon-mamba-7b", "jamba-1.5-large-398b"):
+            cfg, eng = _engine(name, enable_prefix_cache=True)
+            assert not eng.prefix_enabled
+            assert eng.prefix_index is None
+            rng = np.random.default_rng(4)
+            eng.submit(rng.integers(0, cfg.vocab_size, 12), 4)
+            eng.run()
+            assert len(eng.completed) == 1
+
+
+@pytest.mark.slow
+class TestPreemptionWithCoW:
+    def test_preempt_holding_shared_and_cow_pages_recomputes_bitexact(
+            self):
+        """The acceptance case: a prefix-hit request evicted between
+        suffix chunks — its shared references drop, its CoW page frees,
+        readmission re-matches and recomputes to exactly the cold run's
+        tokens, with allocator+index invariants intact throughout."""
+        cfg, cold = _engine("mixtral-8x22b")
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, cfg.vocab_size, 30)
+        cold.submit(prompt, 8)
+        cold.run()
+        toks_cold = tuple(cold.completed[0].generated)
+
+        _, warm = _engine("mixtral-8x22b", enable_prefix_cache=True)
+        warm.submit(prompt[:19], 4)
+        warm.run()
+        rid = warm.submit(prompt, 8)
+        warm.step()                 # hit=19, first suffix chunk runs
+        req = warm.active[rid]
+        assert req.prefix_hit_tokens == 19
+        assert req.prefilling       # genuinely mid-suffix-prefill
+        cached_before = warm.prefix_index.cached_pages()
+        assert warm._preempt_one(protect_rid=-1)
+        assert req.rid not in warm.active
+        # shared pages survived in the index; private pages freed
+        assert warm.prefix_index.cached_pages() == cached_before
+        warm.kvman.check_consistent()
+        warm.prefix_index.check_consistent()
+        warm.run()
+        r = warm.completed[rid]
+        assert r.preempted == 1 and r.preempted_in_prefill == 1
+        assert r.prefix_hit_tokens == 19        # re-hit on readmission
+        assert tuple(r.generated) == toks_cold
+        warm.kvman.check_consistent()
+        warm.prefix_index.check_consistent()
+
+    def test_natural_pressure_with_cache_completes_and_stays_sound(self):
+        """Tight pool + hot cache: reclaim-before-preempt keeps every
+        request finishing with full token counts and invariants held."""
+        cfg, eng = _engine("mixtral-8x22b", enable_prefix_cache=True,
+                           num_pages=24, page_size=4, max_len=64)
+        rng = np.random.default_rng(6)
+        sys_p = rng.integers(0, cfg.vocab_size, 13)
+        for i in range(5):
+            sfx = rng.integers(0, cfg.vocab_size, 6 + 4 * i)
+            eng.submit(np.concatenate([sys_p, sfx]), 8)
+        eng.run()
+        assert len(eng.completed) == 5
+        assert all(len(r.generated) == 8 for r in eng.completed.values())
+        assert eng.slo.summary()["prefix_hit_tokens"] > 0
+        eng.kvman.check_consistent()
+        eng.prefix_index.check_consistent()
+
+
+@pytest.mark.slow
+class TestPageAwareAdmission:
+    def test_admission_reclaims_cache_instead_of_deferring(self):
+        """need > free but need <= free + reclaimable: the policy admits
+        by evicting LRU prefix pages."""
+        cfg, eng = _engine("mixtral-8x22b", enable_prefix_cache=True,
+                           max_len=32, page_size=8, num_pages=4,
+                           prefill_chunk=16)
+        rng = np.random.default_rng(7)
+        eng.submit(rng.integers(0, cfg.vocab_size, 24), 4)
+        eng.run()
+        assert eng.prefix_index.cached_pages() == 3
+        assert eng.kvman.num_free == 1
+        rid = eng.submit(rng.integers(0, cfg.vocab_size, 30), 2)
+        admitted = eng._admit()
+        assert [r.rid for r in admitted] == [rid]
+        assert eng.prefix_index.evicted_pages >= 1
+        eng.kvman.check_consistent()
+        eng.prefix_index.check_consistent()
+        eng.run()
+        assert len(eng.completed) == 2
+
+    def test_hit_needs_fewer_fresh_pages_than_cold(self):
+        """The suffix-after-match term: a request whose first chunk is
+        fully covered by cached pages admits where a cold one defers."""
+        cfg, eng = _engine("mixtral-8x22b", enable_prefix_cache=True,
+                           max_len=32, page_size=8, num_pages=4,
+                           prefill_chunk=16)
+        rng = np.random.default_rng(8)
+        prompt = rng.integers(0, cfg.vocab_size, 24)
+        eng.submit(prompt, 4)
+        eng.run()
+        # pin the cache by keeping a third request active on its pages
+        # -> occupy all free pages with an active long request
+        blocker = eng.submit(rng.integers(0, cfg.vocab_size, 7), 24)
+        eng.step()              # blocker active: 1 page, free=0
+        assert eng.kvman.num_free == 0
+        cold_r = eng.state.new_request(
+            rng.integers(0, cfg.vocab_size, 20), 2)
+        plan_cold = eng.sched.plan_admission(cold_r, qdepth=1)
+        hit_r = eng.state.new_request(prompt[:20], 2)
+        plan_hit = eng.sched.plan_admission(hit_r, qdepth=1)
+        # cold needs 2 fresh pages it can only get by evicting the
+        # cache the hit request needs; the hit needs at most the CoW page
+        assert plan_cold.need > plan_hit.need
+
+    def test_reserve_frac_defers_shallow_queue_admits_deep(self):
+        """The queue-depth term: headroom holds a request back when the
+        queue is shallow and decays away under backlog."""
+        cfg, eng = _engine("mixtral-8x22b", max_len=32, page_size=8,
+                           num_pages=5, prefill_chunk=8,
+                           admit_reserve_frac=2.0)
+        rng = np.random.default_rng(9)
+        r = eng.state.new_request(rng.integers(0, cfg.vocab_size, 20),
+                                  11)
+        # expected total 32 tokens = 4 pages, first chunk 1 page ->
+        # future = 3; frac/(1+q): q=0 -> hold 6 > budget 5 -> defer
+        assert eng.sched.plan_admission(r, qdepth=0).decision == "defer"
+        assert eng.sched.plan_admission(r, qdepth=9).decision == "admit"
+
+    def test_default_policy_matches_pr2_first_chunk_gate(self):
+        """admit_reserve_frac=0 + no cache is exactly the old gate
+        (regression: the PR-2 skip-ahead suite also pins this)."""
+        cfg, eng = _engine("mixtral-8x22b", num_pages=8, max_len=64,
+                           prefill_chunk=32)
+        assert eng.kvman.ensure(3, 48)      # 6 of 8 pages gone
+        eng.free_slots.remove(3)
+        rng = np.random.default_rng(0)
+        rid_long = eng.submit(rng.integers(0, cfg.vocab_size, 40), 4)
+        rid_short = eng.submit(rng.integers(0, cfg.vocab_size, 10), 4)
+        admitted = eng._admit()
+        assert [r.rid for r in admitted] == [rid_short]
+        assert [r.rid for r in eng.queue] == [rid_long]
+
+
+@pytest.mark.slow
+class TestFp8Engine:
+    def test_fp8_pool_serves_and_halves_kv_bytes(self):
+        cfg, eng = _engine("mixtral-8x22b", kv_dtype="fp8")
+        rng = np.random.default_rng(10)
+        eng.submit(rng.integers(0, cfg.vocab_size, 20), 5)
+        eng.run()
+        assert len(eng.completed) == 1
+        assert len(eng.completed[0].generated) == 5
+        k = next(v for li, v in eng.cache.items() if "k" in v)["k"]
+        assert jnp.dtype(k.dtype).itemsize == 1
+
+    def test_fp8_with_prefix_cache_hits_consistently(self):
+        """Quantized pools reuse bit-identically too: the cached pages
+        ARE the fp8 bits, so a hit replays exactly what cold wrote."""
+        cfg, eng = _engine("mixtral-8x22b", kv_dtype="fp8",
+                           enable_prefix_cache=True)
+        rng = np.random.default_rng(11)
+        prompt = rng.integers(0, cfg.vocab_size, 19)
+        eng.submit(prompt, 5)
+        eng.run()
+        first = tuple(eng.completed[0].generated)
+        rid = eng.submit(prompt, 5)
+        eng.run()
+        r = eng.completed[rid]
+        assert r.prefix_hit_tokens == 19
+        assert tuple(r.generated) == first
+
+
+@pytest.mark.slow
+class TestPrefixDispatch:
+    def test_single_replica_prefix_dispatch_equals_bare_engine(self):
+        """PR-3 determinism with the new dispatch + cache on: the
+        cluster layer still adds no numerics."""
+        cfg, dist, params = _setup("mixtral-8x22b")
+        ecfg = EngineConfig(max_batch=4, max_len=64, page_size=8,
+                            prefill_chunk=8, rebalance_every=0,
+                            enable_prefix_cache=True)
+        rng = np.random.default_rng(12)
+        sys_p = rng.integers(0, cfg.vocab_size, 17)
+        prompts = [np.concatenate(
+            [sys_p, rng.integers(0, cfg.vocab_size, 4 + 3 * i)])
+            for i in range(4)]
+
+        bare = ServingEngine(cfg, dist, jax.tree.map(lambda a: a, params),
+                             ecfg)
+        for p in prompts:
+            bare.submit(p, 5)
+        bare.run()
+
+        clus = ClusterEngine(cfg, dist, params, ecfg,
+                             ClusterConfig(num_replicas=1,
+                                           dispatch="prefix"),
+                             step_cost=None)
+        for p in prompts:
+            clus.submit(p, 5)
+        clus.run()
+        assert len(clus.completed) == len(prompts)
+        for rid, r in bare.completed.items():
+            assert tuple(clus.completed[rid].generated) == \
+                tuple(r.generated)
+        hb, hc = bare.expert_hist_log, clus.replicas[0].expert_hist_log
+        assert len(hb) == len(hc) > 0
+        for a, b in zip(hb, hc):
+            np.testing.assert_array_equal(a, b)
+
+    def test_two_replica_affinity_routes_to_the_warm_cache(self):
+        cfg, dist, params = _setup("mixtral-8x22b")
+        # prefix_min_tokens=8: incidental 1-2 token matches of random
+        # prompts must not steer dispatch (admission wouldn't take them)
+        ecfg = EngineConfig(max_batch=4, max_len=64, page_size=8,
+                            prefill_chunk=8, rebalance_every=0,
+                            enable_prefix_cache=True,
+                            prefix_min_tokens=8)
+        clus = ClusterEngine(cfg, dist, params, ecfg,
+                             ClusterConfig(num_replicas=2,
+                                           dispatch="prefix"),
+                             step_cost=None)
+        rng = np.random.default_rng(13)
+        prompt = rng.integers(0, cfg.vocab_size, 19)
+        c0 = clus.submit(prompt, 4)
+        home = clus.replica_of(c0)
+        clus.run()
+        # the warm replica wins the rematch even though both are idle
+        c1 = clus.submit(np.concatenate(
+            [prompt, rng.integers(0, cfg.vocab_size, 6)]), 4)
+        assert clus.replica_of(c1) == home
+        clus.run()
+        rep = clus.replicas[home]
+        assert rep.slo.summary()["prefix_hit_tokens"] > 0
+        # an unrelated prompt is no affinity signal (below
+        # prefix_min_tokens) — it takes the least-outstanding fallback
+        unrelated = rng.integers(0, cfg.vocab_size, 9)
+        assert rep.prefix_match_len(unrelated) == 0
+        hits_before = rep.slo.prefix_hit_tokens_total
+        clus.submit(unrelated, 4)
+        clus.run()
+        assert len(clus.completed) == 3
+        # ... and serving it produced no new hits anywhere
+        assert sum(r.slo.prefix_hit_tokens_total
+                   for r in clus.replicas) == hits_before
