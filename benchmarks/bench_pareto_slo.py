@@ -43,6 +43,7 @@ from repro.core import build_placement, slots_for_ratio
 from repro.models import init_lm
 from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
                            TrafficConfig, generate_trace)
+from repro.serving.cluster import default_step_cost
 from repro.sharding.policy import make_dist
 
 
@@ -59,6 +60,15 @@ class ParetoSetup:
     search_iters: int = 6
     rate_lo: float = 50.0       # near-idle calibration rate (req/s)
     rate_cap: float = 1e5       # bracket-doubling safety cap
+    # --- virtual-clock step-cost model ---
+    cost_model: str = "activated"   # "activated": cluster.default_step_cost
+                                    # (decode charges raw max_activated);
+                                    # "roofline": sim.roofline per-impl
+                                    # HBM-bytes model — shows the fused
+                                    # kernel's latency headroom
+    moe_impl: str = "ragged"        # engine expert datapath; also picks
+                                    # the roofline traffic account
+                                    # ("fused" -> fused, else two_pass)
 
 
 def build_model(setup: ParetoSetup):
@@ -92,7 +102,15 @@ class ParetoProbe:
         self.ecfg = EngineConfig(
             max_batch=setup.max_batch, max_len=setup.max_len,
             prefill_chunk=setup.prefill_chunk, decode_algo=algo,
-            rebalance_every=0)
+            moe_impl=setup.moe_impl, rebalance_every=0)
+        if setup.cost_model == "roofline":
+            from repro.sim import make_roofline_step_cost
+            traffic_impl = ("fused" if setup.moe_impl == "fused"
+                            else "two_pass")
+            self.step_cost = make_roofline_step_cost(cfg, traffic_impl)
+        else:
+            assert setup.cost_model == "activated", setup.cost_model
+            self.step_cost = default_step_cost
         self.fn_cache = {"decode": {}, "prefill": {}, "chunk": {},
                          "mixed": {}}
         self.runs = 0
@@ -102,6 +120,7 @@ class ParetoProbe:
             self.cfg, self.dist, self.params, self.ecfg,
             ClusterConfig(num_replicas=self.setup.num_replicas,
                           dispatch="low"),
+            step_cost=self.step_cost,
             fn_cache=self.fn_cache)
         s = clus.replay_open_loop(make_trace(self.cfg, self.setup, rate))
         self.runs += 1
@@ -157,7 +176,8 @@ def run(fast: bool = False, setup: ParetoSetup = None):
              f"sat_eplb={sat['eplb'] * 1e3:.3f}ms;"
              f"base_metro={base['metro'] * 1e3:.3f}ms;"
              f"sat_metro={sat['metro'] * 1e3:.3f}ms;"
-             f"bracketed={bracketed}")]
+             f"bracketed={bracketed};"
+             f"cost_model={setup.cost_model};moe_impl={setup.moe_impl}")]
 
     # --- the Pareto point: max sustainable rate at the fixed target ---
     rates, at_rate = {}, {}
@@ -197,8 +217,17 @@ def run(fast: bool = False, setup: ParetoSetup = None):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--cost-model", default="activated",
+                    choices=("activated", "roofline"),
+                    help="decode step cost: raw max_activated or the "
+                         "per-impl roofline HBM-bytes model")
+    ap.add_argument("--moe-impl", default="ragged",
+                    choices=("ragged", "scan_tiles", "pallas", "fused"),
+                    help="engine expert-FFN datapath (also selects the "
+                         "roofline traffic account)")
     args = ap.parse_args()
-    rows, checks = run(fast=args.fast)
+    rows, checks = run(fast=args.fast, setup=ParetoSetup(
+        cost_model=args.cost_model, moe_impl=args.moe_impl))
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.1f},{derived}")

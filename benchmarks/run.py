@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   engine_scale          bucketing/paging compile discipline + Poisson load
   pareto_slo            cluster throughput-at-fixed-SLO (METRO vs EPLB)
   prefix_cache          TTFT/pages-saved vs prefix-hit rate (METRO vs EPLB)
+  moe_kernels           fused expert-FFN megakernel vs two-pass (HBM
+                        bytes model + dead-tile DMA accounting)
 """
 import argparse
 import sys
@@ -25,9 +27,9 @@ def main() -> None:
                     help="reduced trial counts")
     args = ap.parse_args()
 
-    from benchmarks import (bench_engine_scale, bench_pareto_slo,
-                            bench_prefix_cache, fig5_engine,
-                            fig6_routing_overhead,
+    from benchmarks import (bench_engine_scale, bench_moe_kernels,
+                            bench_pareto_slo, bench_prefix_cache,
+                            fig5_engine, fig6_routing_overhead,
                             fig8_activated_experts, fig9_10_e2e,
                             fig11_breakdown, fig12_pareto)
     suites = {
@@ -35,6 +37,7 @@ def main() -> None:
         "pareto_slo": lambda: bench_pareto_slo.run(fast=args.fast)[0],
         "prefix_cache": lambda: bench_prefix_cache.run(
             fast=args.fast)[0],
+        "moe_kernels": lambda: bench_moe_kernels.run(fast=args.fast)[0],
         "fig6": lambda: fig6_routing_overhead.run(),
         "fig8": lambda: fig8_activated_experts.run(
             trials=3 if args.fast else 8),

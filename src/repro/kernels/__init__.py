@@ -5,11 +5,15 @@
                     kernel, §V)
   moe_ffn.py      — grouped expert FFN with activated-expert-only
                     weight-tile streaming (the memory-bound mechanism
-                    METRO optimizes, §III-B)
+                    METRO optimizes, §III-B): the two-pass
+                    grouped_ffn_pallas and the one-pass
+                    fused_expert_ffn_pallas megakernel (up→act→down,
+                    hidden resident in VMEM, dead-tile DMA/FLOP skip)
   flash_decode.py — online-softmax decode attention over bf16/fp8 KV
                     caches (in-register dequant after the block DMA)
 
-ops.py: jitted wrappers (interpret=True on CPU; set
-REPRO_PALLAS_INTERPRET=0 on real TPU).  ref.py: pure-numpy oracles the
-tests sweep against.
+ops.py: jitted wrappers (interpret mode read per call from
+REPRO_PALLAS_INTERPRET, default on for CPU; explicit interpret=
+overrides).  ref.py: pure-numpy oracles the tests sweep against.
+README.md here: impl matrix, VMEM sizing rule, dead-tile contract.
 """

@@ -1,22 +1,43 @@
-"""Pallas TPU kernel: grouped expert-FFN matmul with activated-expert-only
-weight streaming.
+"""Pallas TPU kernels: grouped expert-FFN matmuls with activated-expert-
+only weight streaming, plus the fused one-pass up→act→down megakernel.
 
 This is the memory-traffic mechanism METRO optimizes (paper §III-B): in
 the memory-bound regime the MoE layer's runtime is dominated by expert
-weight loads HBM->VMEM.  The kernel's weight BlockSpec is indexed by the
-scalar-prefetched ``tile_group`` map, so a weight tile is DMA'd iff some
-token tile references that expert — non-activated experts' weights are
-*never touched*.  Consecutive tiles of the same group reuse the resident
-VMEM buffer (Pallas skips the DMA when the block index repeats, which
-the sorted layout maximizes).
+weight loads HBM->VMEM.  Every kernel here indexes its weight BlockSpec
+by the scalar-prefetched ``tile_group`` map, so a weight tile is DMA'd
+iff some *live* token tile references that expert — non-activated
+experts' weights are never touched, and dead tiles (``tile_group[i] ==
+-1``: buffer tiles holding only padding rows) repeat the previous live
+tile's block indices so Pallas skips their DMA entirely (a repeated
+block index is never refetched) and ``pl.when`` skips their FLOPs.
 
-Semantics == ref.grouped_matmul_ref: rows of token-tile t are multiplied
-by w[tile_group[t]].  The MoE layer guarantees tile alignment via
-build_pair_buffer.
+Two kernels:
 
-Grid: (m_tiles, f_tiles, k_tiles) — K innermost for accumulation.
-Blocks: x (tm, tk) / w (1, tk, tf) / out (tm, tf), fp32 accumulator in
-VMEM scratch.
+``grouped_ffn_pallas``  — one grouped matmul (one of the two passes of
+    the classic expert FFN).  Grid ``(m_tiles, f_tiles, k_tiles)``, K
+    innermost for accumulation.  Semantics == ref.grouped_matmul_ref on
+    live tiles; dead tiles emit zeros.
+
+``fused_expert_ffn_pallas`` — the whole expert FFN in ONE kernel:
+    per resident token tile it streams the group's up-projection
+    k-tiles into an fp32 VMEM accumulator, applies the silu/gelu gating
+    *in VMEM*, then streams the down-projection k-tiles and accumulates
+    the output.  The ``[tile_m, n_up*fe]`` hidden never touches HBM,
+    and each activated expert's weights are loaded exactly once per
+    resident token tile.  Grid ``(m_tiles, k_up_tiles + k_down_tiles)``
+    — the second dimension enumerates the up phases then the down
+    phases; scratch persists across phases of the same token tile.
+    Semantics == ref.fused_expert_ffn_ref.
+
+VMEM sizing rule (see kernels/README.md): the fused kernel keeps
+``tile_m * n_up*fe`` fp32 hidden + ``tile_m * fe`` gated + ``tile_m *
+d`` fp32 output accumulators resident, plus one ``tile_k_up x n_up*fe``
+up-weight tile and one ``tile_k_dn x d`` down-weight tile — choose
+``tile_m`` / ``tile_k_*`` so the sum stays under ~half of VMEM
+(double-buffered DMA needs the rest).
+
+The MoE layer guarantees tile alignment and the trailing-dead layout
+(all fully-dead tiles follow the last live tile) via build_pair_buffer.
 """
 from __future__ import annotations
 
@@ -32,19 +53,46 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     getattr(pltpu, "TPUCompilerParams")
 
 
-def _kernel(tile_group, x_ref, w_ref, out_ref, acc_ref, *, k_tiles: int):
-    ki = pl.program_id(2)
+# ----------------------------------------------------------------------
+# two-pass grouped matmul (one pass per call)
+# ----------------------------------------------------------------------
 
-    @pl.when(ki == 0)
+
+def _kernel(tile_group, n_live, x_ref, w_ref, out_ref, acc_ref, *,
+            k_tiles: int):
+    i = pl.program_id(0)
+    ki = pl.program_id(2)
+    live = tile_group[i] >= 0
+
+    @pl.when(live & (ki == 0))
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
-                            preferred_element_type=jnp.float32)
+    @pl.when(live)
+    def _mac():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                                preferred_element_type=jnp.float32)
 
     @pl.when(ki == k_tiles - 1)
     def _flush():
-        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+        out_ref[...] = jnp.where(live, acc_ref[...],
+                                 0.0).astype(out_ref.dtype)
+
+
+def _dma_row(i, nl):
+    """Last live token-tile row for grid step ``i``: dead tiles (which
+    are trailing — build_pair_buffer's layout) repeat the previous live
+    tile's block index, so Pallas never re-DMAs for them."""
+    return jnp.maximum(jnp.minimum(i, nl[0] - 1), 0)
+
+
+def _freeze(i, nl, live_idx, frozen_idx):
+    """Block index for a possibly-dead grid row: live rows walk their
+    own index, dead rows PARK on the last live tile's final index (the
+    index must not change across a dead tile's grid steps, or Pallas
+    would re-DMA — freezing the phase/k component is as load-bearing
+    as freezing the group)."""
+    return jnp.where(i < nl[0], live_idx, frozen_idx)
 
 
 @functools.partial(
@@ -54,7 +102,8 @@ def grouped_ffn_pallas(x, w, tile_group, *, tile_m: int = 0,
                        tile_k: int = 512, tile_f: int = 512,
                        interpret: bool = True):
     """x: [C, d] (C = n_tiles * tile_m, sorted/tile-aligned); w: [S, d, f];
-    tile_group: [n_tiles] int32. Returns [C, f] in x.dtype."""
+    tile_group: [n_tiles] int32, -1 = dead tile (skipped: no weight DMA,
+    no FLOPs, zero output). Returns [C, f] in x.dtype."""
     c, d = x.shape
     s, _, f = w.shape
     n_tiles = tile_group.shape[0]
@@ -65,27 +114,184 @@ def grouped_ffn_pallas(x, w, tile_group, *, tile_m: int = 0,
     assert d % tile_k == 0 and f % tile_f == 0, (d, tile_k, f, tile_f)
     k_tiles = d // tile_k
 
+    tile_group = tile_group.astype(jnp.int32)
+    n_live = jnp.sum(tile_group >= 0).astype(jnp.int32)[None]
+
     grid = (n_tiles, f // tile_f, k_tiles)
     kernel = functools.partial(_kernel, k_tiles=k_tiles)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((tile_m, tile_k),
-                             lambda i, j, k, tg: (i, k)),
+                pl.BlockSpec(
+                    (tile_m, tile_k),
+                    lambda i, j, k, tg, nl: (
+                        _dma_row(i, nl),
+                        _freeze(i, nl, k, k_tiles - 1))),
                 # weight tile selected by the token tile's expert — the
-                # activated-expert-only streaming
-                pl.BlockSpec((1, tile_k, tile_f),
-                             lambda i, j, k, tg: (tg[i], k, j)),
+                # activated-expert-only streaming (dead tiles park on
+                # the last live tile's FINAL (k, j) block: repeated
+                # index, no DMA)
+                pl.BlockSpec(
+                    (1, tile_k, tile_f),
+                    lambda i, j, k, tg, nl: (
+                        jnp.maximum(tg[_dma_row(i, nl)], 0),
+                        _freeze(i, nl, k, k_tiles - 1),
+                        _freeze(i, nl, j, f // tile_f - 1))),
             ],
             out_specs=pl.BlockSpec((tile_m, tile_f),
-                                   lambda i, j, k, tg: (i, j)),
+                                   lambda i, j, k, tg, nl: (i, j)),
             scratch_shapes=[pltpu.VMEM((tile_m, tile_f), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((c, f), x.dtype),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
-    )(tile_group.astype(jnp.int32), x, w)
+    )(tile_group, n_live, x, w)
+
+
+# ----------------------------------------------------------------------
+# fused one-pass expert FFN: up → act → down, hidden stays in VMEM
+# ----------------------------------------------------------------------
+
+
+def _fused_kernel(tile_group, n_live, x_ref, wu_ref, wd_ref, out_ref,
+                  h_ref, hg_ref, acc_ref, *, k_up: int, k_dn: int,
+                  tile_k_dn: int, fe: int, gated: bool):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    live = tile_group[i] >= 0
+
+    @pl.when(j == 0)
+    def _zero():
+        h_ref[...] = jnp.zeros_like(h_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- up phases: accumulate the hidden in fp32 VMEM --------------
+    @pl.when(live & (j < k_up))
+    def _up():
+        h_ref[...] += jnp.dot(x_ref[...], wu_ref[0],
+                              preferred_element_type=jnp.float32)
+
+    # ---- gate in VMEM after the last up k-tile ----------------------
+    @pl.when(live & (j == k_up - 1))
+    def _gate():
+        # cast the fp32 accumulator to the compute dtype BEFORE the
+        # activation — the two-pass datapath gates on the dtype-cast
+        # matmul output (ragged_dot accumulates f32 internally, then
+        # casts), and matching it keeps fused serve token-identical
+        h = h_ref[...].astype(hg_ref.dtype)
+        if gated:
+            g, u = h[:, :fe], h[:, fe:]
+            act = jax.nn.silu(g) * u
+        else:
+            act = jax.nn.gelu(h)
+        hg_ref[...] = act.astype(hg_ref.dtype)
+
+    # ---- down phases: stream w_down, accumulate the output ----------
+    @pl.when(live & (j >= k_up))
+    def _down():
+        kf = j - k_up
+        off = pl.multiple_of(kf * tile_k_dn, tile_k_dn)
+        hblk = hg_ref[:, pl.ds(off, tile_k_dn)]
+        acc_ref[...] += jnp.dot(hblk, wd_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(j == k_up + k_dn - 1)
+    def _flush():
+        out_ref[...] = jnp.where(live, acc_ref[...],
+                                 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gated", "tile_m", "tile_k_up", "tile_k_dn",
+                     "interpret"))
+def fused_expert_ffn_pallas(x, w_up, w_down, tile_group, *, gated: bool,
+                            tile_m: int = 0, tile_k_up: int = 512,
+                            tile_k_dn: int = 512, interpret: bool = True):
+    """One-pass expert FFN: out = act(x @ w_up[g]) @ w_down[g] per tile.
+
+    x: [C, d] sorted/tile-aligned buffer (C = n_tiles * tile_m);
+    w_up: [S, d, n_up*fe] (n_up = 2 when ``gated``: [gate | up] halves);
+    w_down: [S, fe, d]; tile_group: [n_tiles] int32, -1 = dead tile.
+    Returns [C, d] in x.dtype; dead tiles yield exact zeros.
+
+    The hidden activation never leaves VMEM and each live tile streams
+    its group's up+down weights exactly once (dead tiles: no DMA, no
+    FLOPs — their block indices repeat the last live tile's).
+    """
+    c, d = x.shape
+    s, _, f_up = w_up.shape
+    _, fe, _ = w_down.shape
+    n_up = 2 if gated else 1
+    assert f_up == n_up * fe, (f_up, n_up, fe)
+    n_tiles = tile_group.shape[0]
+    tile_m = tile_m or c // n_tiles
+    assert c == n_tiles * tile_m, (c, n_tiles, tile_m)
+    tile_k_up = min(tile_k_up, d)
+    tile_k_dn = min(tile_k_dn, fe)
+    assert d % tile_k_up == 0 and fe % tile_k_dn == 0, \
+        (d, tile_k_up, fe, tile_k_dn)
+    k_up = d // tile_k_up
+    k_dn = fe // tile_k_dn
+
+    tile_group = tile_group.astype(jnp.int32)
+    n_live = jnp.sum(tile_group >= 0).astype(jnp.int32)[None]
+
+    grid = (n_tiles, k_up + k_dn)
+    kernel = functools.partial(
+        _fused_kernel, k_up=k_up, k_dn=k_dn, tile_k_dn=tile_k_dn, fe=fe,
+        gated=gated)
+
+    def _g(i, nl, tg):
+        return jnp.maximum(tg[_dma_row(i, nl)], 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                # x k-tile: advances over the up phases, parks on the
+                # last up index during the down phases (no refetch);
+                # dead tiles park on the last live tile's final index
+                pl.BlockSpec(
+                    (tile_m, tile_k_up),
+                    lambda i, j, tg, nl: (
+                        _dma_row(i, nl),
+                        _freeze(i, nl, jnp.minimum(j, k_up - 1),
+                                k_up - 1))),
+                # up-weight tile: advances over up phases, parks after
+                pl.BlockSpec(
+                    (1, tile_k_up, f_up),
+                    lambda i, j, tg, nl: (
+                        _g(i, nl, tg),
+                        _freeze(i, nl, jnp.minimum(j, k_up - 1),
+                                k_up - 1), 0)),
+                # down-weight tile: parks on 0 during up phases (its
+                # single prefetch is the tile the first down phase
+                # needs), advances over the down phases; dead tiles
+                # park on the final down index
+                pl.BlockSpec(
+                    (1, tile_k_dn, d),
+                    lambda i, j, tg, nl: (
+                        _g(i, nl, tg),
+                        _freeze(i, nl, jnp.maximum(j - k_up, 0),
+                                k_dn - 1), 0)),
+            ],
+            out_specs=pl.BlockSpec((tile_m, d),
+                                   lambda i, j, tg, nl: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((tile_m, f_up), jnp.float32),   # hidden acc
+                pltpu.VMEM((tile_m, fe), x.dtype),         # gated hidden
+                pltpu.VMEM((tile_m, d), jnp.float32),      # output acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((c, d), x.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(tile_group, n_live, x, w_up, w_down)

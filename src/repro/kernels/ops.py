@@ -1,7 +1,12 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True on CPU (this container) and should be set
-False on real TPU via REPRO_PALLAS_INTERPRET=0.
+``interpret`` defaults to True on CPU (this container) and False on
+real TPU via ``REPRO_PALLAS_INTERPRET=0``.  The env var is read *per
+call* (at trace time), so tests and TPU runs can flip modes in-process;
+an explicit ``interpret=`` argument overrides the env var entirely.
+Note the underlying kernels are jitted with ``interpret`` static —
+flipping the mode between calls retraces, it does not silently reuse
+the previous mode's compilation.
 """
 from __future__ import annotations
 
@@ -10,23 +15,36 @@ import os
 import jax
 
 from repro.kernels.metro_route import metro_route_pallas
-from repro.kernels.moe_ffn import grouped_ffn_pallas
+from repro.kernels.moe_ffn import fused_expert_ffn_pallas, grouped_ffn_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
 
-_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+def _interpret(override=None) -> bool:
+    if override is not None:
+        return bool(override)
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
 def metro_route(token_counts, expert_slots, *, num_devices: int,
-                slots_per_device: int):
+                slots_per_device: int, interpret=None):
     return metro_route_pallas(
         token_counts, expert_slots, num_devices=num_devices,
-        slots_per_device=slots_per_device, interpret=_INTERPRET)
+        slots_per_device=slots_per_device, interpret=_interpret(interpret))
 
 
-def grouped_ffn_matmul(x, w, tile_group):
-    return grouped_ffn_pallas(x, w, tile_group, interpret=_INTERPRET)
+def grouped_ffn_matmul(x, w, tile_group, *, interpret=None):
+    return grouped_ffn_pallas(x, w, tile_group,
+                              interpret=_interpret(interpret))
 
 
-def flash_decode(q, k_cache, v_cache, pos, block_s: int = 512):
-    return flash_decode_pallas(q, k_cache, v_cache, pos,
-                               block_s=block_s, interpret=_INTERPRET)
+def fused_expert_ffn(x, w_up, w_down, tile_group, *, gated: bool,
+                     interpret=None):
+    return fused_expert_ffn_pallas(x, w_up, w_down, tile_group,
+                                   gated=gated,
+                                   interpret=_interpret(interpret))
+
+
+def flash_decode(q, k_cache, v_cache, pos, block_s: int = 512,
+                 interpret=None):
+    return flash_decode_pallas(q, k_cache, v_cache, pos, block_s=block_s,
+                               interpret=_interpret(interpret))

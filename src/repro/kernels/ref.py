@@ -56,6 +56,44 @@ def grouped_matmul_ref(x: np.ndarray, w: np.ndarray,
     return out
 
 
+def fused_expert_ffn_ref(x: np.ndarray, w_up: np.ndarray,
+                         w_down: np.ndarray, tile_group: np.ndarray,
+                         *, gated: bool) -> np.ndarray:
+    """Oracle for the fused one-pass expert FFN megakernel.
+
+    Per token tile t with g = tile_group[t]:
+      h = x[t] @ w_up[g]                       # [tile, n_up*fe]
+      a = silu(h[:, :fe]) * h[:, fe:]  (gated) | gelu(h)  (otherwise)
+      out[t] = a @ w_down[g]                   # [tile, d]
+    Dead tiles (g == -1) are exact zeros — no weights touched.
+
+    x: [C, d]; w_up: [S, d, n_up*fe]; w_down: [S, fe, d];
+    tile_group: [C // tile] (-1 = dead).  fp32 math throughout.
+    """
+    c, d = x.shape
+    fe = w_down.shape[1]
+    n_tiles = len(tile_group)
+    tile = c // n_tiles
+    xf = np.asarray(x, np.float32)
+    uf = np.asarray(w_up, np.float32)
+    df = np.asarray(w_down, np.float32)
+    out = np.zeros((c, d), np.float32)
+    for t in range(n_tiles):
+        g = int(tile_group[t])
+        if g < 0:
+            continue
+        sl = slice(t * tile, (t + 1) * tile)
+        h = xf[sl] @ uf[g]
+        if gated:
+            gate, up = h[:, :fe], h[:, fe:]
+            a = gate / (1.0 + np.exp(-gate)) * up          # silu
+        else:                                              # tanh-gelu
+            a = 0.5 * h * (1.0 + np.tanh(
+                np.sqrt(2.0 / np.pi) * (h + 0.044715 * h ** 3)))
+        out[sl] = a @ df[g]
+    return out
+
+
 def flash_prefill_paged_ref(q: np.ndarray, k_pool: np.ndarray,
                             v_pool: np.ndarray, start: np.ndarray,
                             page_table: np.ndarray,

@@ -436,6 +436,15 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
     ``flash_decode_paged`` kernel (full-attention layers only — SWA
     keeps the gather reference).
 
+    ``moe_impl`` selects the grouped expert-FFN datapath per MoE layer:
+    ``"ragged"`` (lax.ragged_dot, the XLA fast path), ``"scan_tiles"``,
+    ``"onehot"`` (oracle), ``"pallas"`` (two-pass Pallas kernel), or
+    ``"fused"`` (one-pass up→act→down Pallas megakernel — the hidden
+    activation never touches HBM; forward/serving only, train with a
+    two-pass impl; kernels/README.md has the matrix).
+    ``use_pallas_route`` moves METRO's Alg. 1 greedy onto the Pallas
+    scalar-core kernel.
+
     ``mode="chunk_prefill"``: resumable chunked prefill.  ``tokens`` is
     a [B, C] chunk, ``pos`` [B] the absolute position of each row's
     first chunk token, ``cache`` the SERVING cache (paged pools +

@@ -143,9 +143,21 @@ def build_pair_buffer(slots, lo, s_loc: int, capacity: int, tile: int):
     slots: [T, k] physical slot per pair (-1 pad). Returns:
       buf_pair:   [C] flat pair index per buffer row (-1 = padding row)
       group_pad:  [S_loc] tile-padded group sizes (sum <= C)
-      tile_group: [C // tile] local-slot id per tile (for weight streaming)
+      tile_group: [C // tile] local-slot id per tile (for weight
+                  streaming); **-1 marks dead tiles** — tiles with zero
+                  live rows (the region past the last live group, and
+                  any tile whose rows were all dropped by capacity).
+                  Dead tiles are always *trailing* (live rows fill each
+                  group's segment from the front, segments are packed
+                  in slot order), which is what lets the kernels park
+                  their DMA indices on the last live tile.
+      n_live:     [] int32 count of live tiles (scalar-prefetch operand
+                  for the Pallas kernels and the DMA accounting in
+                  sim/roofline).
     Rows beyond a group's true size (padding) and rows dropped by
-    capacity are marked -1.
+    capacity are marked -1.  The dead-tile contract every grouped-
+    matmul impl honors: dead tiles cost no weight DMA and no FLOPs and
+    their output rows are exact zeros.
     """
     t, k = slots.shape
     flat = slots.reshape(-1)
@@ -176,7 +188,10 @@ def build_pair_buffer(slots, lo, s_loc: int, capacity: int, tile: int):
     bounds = jnp.cumsum(group_pad)
     tile_group = jnp.searchsorted(bounds, tile_start, side="right").astype(_INT)
     tile_group = jnp.minimum(tile_group, s_loc - 1)
-    return buf_pair, group_pad, tile_group
+    tile_live = jnp.any((buf_pair >= 0).reshape(n_tiles, tile), axis=1)
+    tile_group = jnp.where(tile_live, tile_group, -1)
+    n_live = jnp.sum(tile_live).astype(_INT)
+    return buf_pair, group_pad, tile_group, n_live
 
 
 # ----------------------------------------------------------------------
@@ -187,33 +202,61 @@ def build_pair_buffer(slots, lo, s_loc: int, capacity: int, tile: int):
 def grouped_matmul(x, w, group_pad, tile_group, impl: str):
     """x: [C, d] tile-aligned sorted buffer; w: [S_loc, d, f].
 
-    Rows within group_pad ranges use that group's weights; rows beyond
-    sum(group_pad) are garbage and must be masked by the caller.
+    Rows within group_pad ranges use that group's weights.  Dead tiles
+    (``tile_group == -1``: rows past the last live group, including the
+    residual capacity slack) take the dead-tile path — no weight
+    streaming, no FLOPs where the impl can express it, exact-zero
+    output rows.  Live tiles' intra-group pad rows still compute
+    garbage the caller masks (they share a tile with real rows).
     """
     c, d = x.shape
     s_loc, _, f = w.shape
     if impl == "ragged":
-        gs = group_pad.at[s_loc - 1].add(c - jnp.sum(group_pad))
-        return jax.lax.ragged_dot(x, w, gs.astype(jnp.int32))
+        # segment g occupies [pad_off[g], pad_off[g] + group_pad[g])
+        # clipped to the buffer; rows beyond the last clipped segment
+        # (residual capacity slack) belong to NO group, and ragged_dot
+        # zero-fills them — the dead-tile path.  (The seed impl dumped
+        # that residual into the last local expert via
+        # ``group_pad.at[s_loc-1].add(c - sum)``, making it stream the
+        # last expert's weights over pure padding.)
+        pad_off = jnp.concatenate(
+            [jnp.zeros(1, _INT), jnp.cumsum(group_pad)[:-1].astype(_INT)])
+        gs = jnp.clip(c - pad_off, 0, group_pad)
+        out = jax.lax.ragged_dot(x, w, gs.astype(jnp.int32))
+        # rows past the last segment belong to no group; ragged_dot
+        # zero-fills them on XLA:CPU but that is not a documented
+        # contract — mask explicitly so the exact-zero dead-tile
+        # guarantee holds on every backend
+        residual = jnp.arange(c) >= jnp.sum(gs)
+        return jnp.where(residual[:, None], 0.0, out)
     if impl == "scan_tiles":
         tile = c // tile_group.shape[0]
         xt = x.reshape(-1, tile, d)
 
         def body(_, args):
             xi, g = args
-            return None, xi @ w[g]
+            # lax.cond: dead tiles skip the matmul entirely
+            yi = jax.lax.cond(
+                g >= 0,
+                lambda: xi @ w[jnp.maximum(g, 0)],
+                lambda: jnp.zeros((tile, f), x.dtype))
+            return None, yi
 
         _, yt = jax.lax.scan(body, None, (xt, tile_group))
         return yt.reshape(c, f)
     if impl == "onehot":  # oracle; O(C * S_loc * d * f)
-        bounds = jnp.cumsum(group_pad)
-        row_group = jnp.searchsorted(bounds, jnp.arange(c), side="right")
-        row_group = jnp.minimum(row_group, s_loc - 1)
+        tile = c // tile_group.shape[0]
+        row_group = jnp.repeat(tile_group, tile)
+        # one_hot(-1) is the all-zero row: dead tiles select no expert
         sel = jax.nn.one_hot(row_group, s_loc, dtype=x.dtype)
         return jnp.einsum("cs,cd,sdf->cf", sel, x, w)
     if impl == "pallas":
         from repro.kernels import ops as kops
         return kops.grouped_ffn_matmul(x, w, tile_group)
+    if impl == "fused":
+        raise ValueError(
+            "impl='fused' is the one-pass up→act→down megakernel — it "
+            "has no single-matmul form; _expert_compute dispatches it")
     raise ValueError(f"unknown grouped_matmul impl {impl!r}")
 
 
@@ -229,30 +272,46 @@ def _expert_compute(cfg: ModelConfig, w_up, w_down, x, ids, gates, slots,
 
     w_up: [S_loc, d, n_up, fe_shard]; w_down: [S_loc, fe_shard, d] —
     fe_shard may be a proper shard (ETP); the caller psums over the ETP
-    axis."""
+    axis.
+
+    ``impl="fused"`` collapses the two grouped matmuls + gating into
+    ONE Pallas megakernel call (kernels/moe_ffn.fused_expert_ffn_pallas):
+    the ``[C, n_up*fe]`` hidden never materializes in HBM and each
+    activated expert's weights stream exactly once per resident token
+    tile (no ``moe_h`` remat point exists on this path — there is no
+    hidden to save)."""
     t, d = x.shape
     k = ids.shape[-1]
     s_l, _, n_up, fe = w_up.shape
-    buf_pair, group_pad, tile_group = build_pair_buffer(
+    buf_pair, group_pad, tile_group, _n_live = build_pair_buffer(
         slots, lo, s_loc, capacity, tile)
     row_valid = buf_pair >= 0
     tok = jnp.where(row_valid, buf_pair // k, 0)
     xg = jnp.where(row_valid[:, None], x[tok], 0).astype(x.dtype)
 
-    h = grouped_matmul(xg, w_up.reshape(s_l, d, n_up * fe).astype(x.dtype),
-                       group_pad, tile_group, impl)
-    if cfg.gated_mlp:
-        g, u = jnp.split(h, 2, axis=-1)
-        h = jax.nn.silu(g) * u
+    if impl == "fused":
+        from repro.kernels import ops as kops
+        y = kops.fused_expert_ffn(
+            xg, w_up.reshape(s_l, d, n_up * fe).astype(x.dtype),
+            w_down.astype(x.dtype), tile_group, gated=cfg.gated_mlp)
+        y = jax.ad_checkpoint.checkpoint_name(y, "moe_y")
     else:
-        h = jax.nn.gelu(h)
-    # named for the save_moe remat policy: saving just these two grouped
-    # matmuls avoids recomputing the dominant expert FLOPs in backward
-    # while attention still remats (perf iteration, EXPERIMENTS.md §Perf)
-    h = jax.ad_checkpoint.checkpoint_name(h, "moe_h")
-    y = grouped_matmul(h.astype(x.dtype), w_down.astype(x.dtype),
-                       group_pad, tile_group, impl)
-    y = jax.ad_checkpoint.checkpoint_name(y, "moe_y")
+        h = grouped_matmul(
+            xg, w_up.reshape(s_l, d, n_up * fe).astype(x.dtype),
+            group_pad, tile_group, impl)
+        if cfg.gated_mlp:
+            g, u = jnp.split(h, 2, axis=-1)
+            h = jax.nn.silu(g) * u
+        else:
+            h = jax.nn.gelu(h)
+        # named for the save_moe remat policy: saving just these two
+        # grouped matmuls avoids recomputing the dominant expert FLOPs
+        # in backward while attention still remats (perf iteration,
+        # EXPERIMENTS.md §Perf)
+        h = jax.ad_checkpoint.checkpoint_name(h, "moe_h")
+        y = grouped_matmul(h.astype(x.dtype), w_down.astype(x.dtype),
+                           group_pad, tile_group, impl)
+        y = jax.ad_checkpoint.checkpoint_name(y, "moe_y")
 
     gate = jnp.where(row_valid, gates.reshape(-1)[jnp.maximum(buf_pair, 0)], 0.0)
     y = y.astype(jnp.float32) * gate[:, None]

@@ -140,6 +140,15 @@ class EngineConfig:
                                     # Pallas flash_decode_paged kernel
                                     # (full-attention layers; SWA keeps
                                     # the gather reference)
+    moe_impl: str = "ragged"    # grouped expert-FFN datapath:
+                                # "ragged" | "scan_tiles" | "onehot" |
+                                # "pallas" (two-pass Pallas kernel) |
+                                # "fused" (one-pass up→act→down Pallas
+                                # megakernel, hidden stays in VMEM) —
+                                # see kernels/README.md for the matrix
+    use_pallas_route: bool = False  # METRO Alg. 1 greedy routing on the
+                                    # Pallas scalar-core kernel instead
+                                    # of the lax.scan reference
 
 
 class ServingEngine:
@@ -152,6 +161,8 @@ class ServingEngine:
         assert ecfg.kv_layout in ("paged", "dense"), ecfg.kv_layout
         assert ecfg.prefill_mode in ("chunked", "wave"), ecfg.prefill_mode
         assert ecfg.kv_dtype in ("bf16", "fp32", "fp8"), ecfg.kv_dtype
+        assert ecfg.moe_impl in ("ragged", "scan_tiles", "onehot",
+                                 "pallas", "fused"), ecfg.moe_impl
         assert ecfg.kv_dtype == "bf16" or ecfg.kv_layout == "paged", \
             "kv_dtype plumbing is paged-path only"
         self.cfg = cfg

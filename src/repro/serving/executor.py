@@ -158,6 +158,8 @@ class Executor:
                 logits, new_cache, stats = LM.apply_lm(
                     cfg, dist, params, tokens=tokens, pos=pos, cache=cache,
                     routing=routing, mode="decode", algo=ecfg.decode_algo,
+                    moe_impl=ecfg.moe_impl,
+                    use_pallas_route=ecfg.use_pallas_route,
                     slot_idx=slot_idx,
                     page_table=page_table if paged else None,
                     row_valid=slot_idx < ecfg.max_batch,
@@ -179,7 +181,9 @@ class Executor:
                 _, filled, stats = LM.apply_lm(
                     cfg, dist, params, tokens=tokens, cache=wave,
                     routing=routing, mode="prefill",
-                    algo=ecfg.prefill_algo, chunk=ecfg.prefill_chunk,
+                    algo=ecfg.prefill_algo, moe_impl=ecfg.moe_impl,
+                    use_pallas_route=ecfg.use_pallas_route,
+                    chunk=ecfg.prefill_chunk,
                     row_valid=jnp.arange(length)[None, :]
                     < lengths[:, None])
                 new_cache = LM.merge_wave_cache(
@@ -204,8 +208,9 @@ class Executor:
                 _, new_cache, stats = LM.apply_lm(
                     cfg, dist, params, tokens=tokens, pos=start,
                     cache=cache, routing=routing, mode="chunk_prefill",
-                    algo=ecfg.prefill_algo, slot_idx=slot_idx,
-                    page_table=page_table,
+                    algo=ecfg.prefill_algo, moe_impl=ecfg.moe_impl,
+                    use_pallas_route=ecfg.use_pallas_route,
+                    slot_idx=slot_idx, page_table=page_table,
                     row_valid=jnp.arange(c)[None, :] < n_tok[:, None])
                 return new_cache, stats
             return step
@@ -227,14 +232,16 @@ class Executor:
                 _, cache1, st_p = LM.apply_lm(
                     cfg, dist, params, tokens=p_tokens, pos=p_start,
                     cache=cache, routing=routing, mode="chunk_prefill",
-                    algo=ecfg.prefill_algo, slot_idx=p_slot,
-                    page_table=p_pt,
+                    algo=ecfg.prefill_algo, moe_impl=ecfg.moe_impl,
+                    use_pallas_route=ecfg.use_pallas_route,
+                    slot_idx=p_slot, page_table=p_pt,
                     row_valid=jnp.arange(c)[None, :] < p_ntok[:, None])
                 logits, cache2, st_d = LM.apply_lm(
                     cfg, dist, params, tokens=d_tokens, pos=d_pos,
                     cache=cache1, routing=routing, mode="decode",
-                    algo=ecfg.decode_algo, slot_idx=d_slot,
-                    page_table=d_pt,
+                    algo=ecfg.decode_algo, moe_impl=ecfg.moe_impl,
+                    use_pallas_route=ecfg.use_pallas_route,
+                    slot_idx=d_slot, page_table=d_pt,
                     row_valid=d_slot < ecfg.max_batch,
                     use_flash_kernel=ecfg.use_flash_kernel)
                 nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)

@@ -1,10 +1,12 @@
 from repro.sim.roofline import (
     ParallelismConfig, WorkloadConfig, simulate_decode_step,
     simulate_prefill_step, simulate_serving, synth_topk_batch,
-    decode_layer_breakdown)
+    decode_layer_breakdown, expert_ffn_traffic, fused_weight_dma_tiles,
+    make_roofline_step_cost)
 
 __all__ = [
     "ParallelismConfig", "WorkloadConfig", "simulate_decode_step",
     "simulate_prefill_step", "simulate_serving", "synth_topk_batch",
-    "decode_layer_breakdown",
+    "decode_layer_breakdown", "expert_ffn_traffic",
+    "fused_weight_dma_tiles", "make_roofline_step_cost",
 ]

@@ -119,6 +119,154 @@ def _route_stats(cfg: ModelConfig, placement: Placement, ids: np.ndarray,
 
 
 # ----------------------------------------------------------------------
+# expert-FFN HBM traffic model (per grouped-matmul impl)
+# ----------------------------------------------------------------------
+
+
+def expert_ffn_traffic(impl: str, *, d: int, fe: int, n_up: int,
+                       tile_m: int, n_tiles: int, live_tiles: int,
+                       bytes_weight: float = 2.0,
+                       bytes_act: float = 2.0) -> dict:
+    """Analytic HBM bytes for one local expert-FFN over a pair buffer.
+
+    The buffer holds ``n_tiles`` token tiles of ``tile_m`` rows,
+    ``live_tiles`` of which reference a local expert (the rest are dead
+    padding — METRO's no-drop capacity is ``T*k`` pairs, so dead tiles
+    are common in the decode regime).  Per-impl accounting:
+
+      ``fused``          — one-pass megakernel: each live tile streams
+          its group's up+down weights once; x in / y out for live
+          tiles only; the hidden NEVER touches HBM; dead tiles cost
+          nothing.
+      ``two_pass``       — this PR's dead-tile-skipping ragged /
+          scan_tiles / pallas impls: weights stream per *live* tile in
+          each of the two passes, but the ``[C, n_up*fe]`` hidden
+          round-trips HBM between them (write h, read h for gating,
+          write gated, read gated for the down pass) over the full
+          buffer.
+      ``two_pass_legacy``— the seed behavior: like ``two_pass`` but
+          dead tiles also DMA weight tiles (``tile_group`` was clamped
+          to ``s_loc-1``, so padding tiles fetched the last expert's
+          weights in both passes).
+
+    Returns ``{"weight_bytes", "act_bytes", "hidden_bytes", "total"}``.
+    """
+    f_up = n_up * fe
+    w_group = (d * f_up + fe * d) * bytes_weight   # up + down per tile
+    c = n_tiles * tile_m
+    c_live = live_tiles * tile_m
+    if impl == "fused":
+        weight = live_tiles * w_group
+        act = c_live * 2 * d * bytes_act           # x in + y out
+        hidden = 0.0
+    elif impl == "two_pass":
+        weight = live_tiles * w_group
+        act = c_live * 2 * d * bytes_act
+        hidden = c * 2 * (f_up + fe) * bytes_act   # h w+r, gated w+r
+    elif impl == "two_pass_legacy":
+        weight = n_tiles * w_group                 # dead tiles DMA too
+        act = c * 2 * d * bytes_act
+        hidden = c * 2 * (f_up + fe) * bytes_act
+    else:
+        raise ValueError(f"unknown traffic impl {impl!r}")
+    return {"weight_bytes": float(weight), "act_bytes": float(act),
+            "hidden_bytes": float(hidden),
+            "total": float(weight + act + hidden)}
+
+
+def fused_weight_dma_tiles(tile_group, k_up_tiles: int,
+                           k_down_tiles: int) -> dict:
+    """Emulate the fused megakernel's weight-tile DMA count.
+
+    Replays the kernel's BlockSpec index maps over the grid
+    ``(n_tiles, k_up + k_down)`` with Pallas' revisit-skip semantics (a
+    block whose index equals the previous grid step's is not
+    refetched).  Dead tiles (``tile_group[i] == -1``) park both weight
+    indices on the last live tile's blocks, so they fetch nothing.
+
+    Returns ``{"dma_tiles"`` (k-tile-granular fetches), ``"m_tiles"``
+    (token tiles that triggered any weight fetch), ``"live_tiles"}``.
+    With all k-tile counts >= 2 and distinct groups per live tile,
+    ``dma_tiles == live_tiles * (k_up + k_down)`` exactly; adjacent
+    live tiles sharing a group with a single-k-tile operand can only
+    *lower* the count (the repeated index is skipped too).
+    """
+    tg = np.asarray(tile_group, np.int64)
+    n_live = int((tg >= 0).sum())
+    if n_live == 0:
+        # an all-dead grid still physically prefetches the parked
+        # (group 0) block once — Pallas index maps must name a block —
+        # but it feeds no compute; the model charges nothing
+        return {"dma_tiles": 0, "m_tiles": 0, "live_tiles": 0}
+    count = 0
+    fetching = set()
+    last_u = last_d = None
+    for i in range(len(tg)):
+        ie = max(min(i, n_live - 1), 0)
+        g = max(int(tg[ie]), 0)
+        live = i < n_live
+        for j in range(k_up_tiles + k_down_tiles):
+            # dead tiles park on the last live tile's FINAL indices —
+            # the frozen phase component is what keeps a dead tile's
+            # index constant across its own grid steps
+            iu = (g, min(j, k_up_tiles - 1) if live else k_up_tiles - 1)
+            idn = (g, max(j - k_up_tiles, 0) if live
+                   else k_down_tiles - 1)
+            if iu != last_u:
+                count += 1
+                fetching.add(i)
+                last_u = iu
+            if idn != last_d:
+                count += 1
+                fetching.add(i)
+                last_d = idn
+    return {"dma_tiles": count, "m_tiles": len(fetching),
+            "live_tiles": n_live}
+
+
+def make_roofline_step_cost(cfg: ModelConfig, impl: str, *,
+                            k: Optional[int] = None, tile: int = 8,
+                            hbm_bw: float = 8.0e11,
+                            base: float = 2e-4,
+                            prefill_per_tok: float = 2e-5):
+    """Virtual-clock ``step_cost(kind, n_tokens, stats)`` charging the
+    per-impl expert-FFN HBM-bytes model instead of raw ``max_activated``.
+
+    Decode (the memory-bound phase) is charged
+    ``expert_ffn_traffic(impl)`` per MoE layer on the bottleneck
+    device: ``live_tiles = stats["max_activated"]`` (each activated
+    expert holds >= 1 resident token tile at decode batch sizes) and
+    ``n_tiles = ceil(n_tokens * k / tile)`` buffer tiles (METRO's
+    no-drop capacity) — so EPLB's extra activated experts *and* the
+    impl's dead-tile / hidden-round-trip traffic both surface in the
+    modeled latency, which is how the Pareto harness shows the fused
+    kernel's headroom.  Prefill-carrying calls stay compute-bound
+    (token-proportional), matching ``cluster.default_step_cost``.
+    """
+    assert impl in ("fused", "two_pass", "two_pass_legacy"), impl
+    k = k or max(cfg.num_experts_per_tok, 1)
+    kinds = cfg.layer_kinds()
+    n_moe = sum(1 for _, f in kinds if f == "moe")
+    # dense configs have no MoE layers: decode cost degenerates to the
+    # base + token terms instead of phantom expert traffic
+    moe_layers = (cfg.num_layers // len(kinds)) * n_moe
+    n_up = 2 if cfg.gated_mlp else 1
+
+    def step_cost(kind: str, n_tokens: int, stats: dict) -> float:
+        if kind != "decode":
+            return base + prefill_per_tok * n_tokens
+        act = int(stats["max_activated"])
+        n_tiles = max(int(np.ceil(n_tokens * k / tile)), 1, act)
+        tr = expert_ffn_traffic(
+            impl, d=cfg.d_model, fe=cfg.expert_hidden, n_up=n_up,
+            tile_m=tile, n_tiles=n_tiles, live_tiles=act)
+        return base + moe_layers * tr["total"] / hbm_bw \
+            + 1e-5 * n_tokens
+
+    return step_cost
+
+
+# ----------------------------------------------------------------------
 # per-layer time model
 # ----------------------------------------------------------------------
 

@@ -16,9 +16,14 @@ import os
 import sys
 
 # make `import repro` work without PYTHONPATH=src or an editable install
-_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+_ROOT = os.path.dirname(os.path.dirname(__file__))
+_SRC = os.path.join(_ROOT, "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+# ... and `import benchmarks.*` (shared bench/test harnesses, e.g. the
+# engine-parity serve in benchmarks/bench_moe_kernels.py)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 try:
     from hypothesis import settings

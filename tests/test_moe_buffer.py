@@ -1,5 +1,10 @@
 """Property tests for the MoE dispatch buffer (the static-shape heart
-of the EP datapath) and the grouped-matmul implementations."""
+of the EP datapath) and the grouped-matmul implementations.
+
+The dead-tile contract (build_pair_buffer -> every impl): tiles with
+zero live rows carry ``tile_group == -1``, are always trailing, cost no
+weight DMA / FLOPs in the kernels, and their output rows are exact
+zeros in every impl."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -31,12 +36,13 @@ def test_pair_buffer_invariants(case):
     n_local = int(((slots >= lo) & (slots < lo + s_loc)).sum())
     capacity = ((n_local + s_loc * (tile - 1)) // tile + 1) * tile
 
-    buf_pair, group_pad, tile_group = jax.jit(
+    buf_pair, group_pad, tile_group, n_live = jax.jit(
         build_pair_buffer, static_argnames=("s_loc", "capacity", "tile")
     )(jnp.asarray(slots), lo, s_loc=s_loc, capacity=capacity, tile=tile)
     buf_pair = np.asarray(buf_pair)
     group_pad = np.asarray(group_pad)
     tile_group = np.asarray(tile_group)
+    n_live = int(n_live)
 
     # 1. every local pair appears exactly once; non-local never
     placed = buf_pair[buf_pair >= 0]
@@ -53,14 +59,25 @@ def test_pair_buffer_invariants(case):
         g = flat[pidx] - lo
         assert bounds[g] <= row < bounds[g + 1]
 
-    # 3. tile alignment: group_pad multiples of tile; tile_group
-    #    constant within each tile's segment
+    # 3. tile alignment: group_pad multiples of tile; live tiles'
+    #    tile_group constant within each segment
     assert (group_pad % tile == 0).all()
     for ti, g in enumerate(tile_group):
+        if g < 0:
+            continue
         start = ti * tile
         if start < bounds[-1]:
             # the tile lies fully inside group g's padded segment
             assert bounds[g] <= start and start + tile <= bounds[g + 1]
+
+    # 4. dead-tile marking: -1 exactly on tiles with zero live rows,
+    #    dead tiles are trailing, n_live counts the rest
+    tile_live = (buf_pair >= 0).reshape(-1, tile).any(axis=1)
+    np.testing.assert_array_equal(tile_group >= 0, tile_live)
+    assert n_live == int(tile_live.sum())
+    if n_live < len(tile_group):
+        assert (tile_group[n_live:] == -1).all(), \
+            "dead tiles must be trailing (kernel DMA-parking relies on it)"
 
 
 @settings(max_examples=20, deadline=None)
@@ -79,6 +96,7 @@ def test_grouped_matmul_impls_agree(seed):
     tg = np.minimum(
         np.searchsorted(bounds, np.arange(c // tile) * tile, side="right"),
         s_loc - 1).astype(np.int32)
+    tg[np.arange(c // tile) * tile >= gs.sum()] = -1   # dead slack tiles
     tgj = jnp.asarray(tg)
 
     outs = {impl: np.asarray(
@@ -89,3 +107,9 @@ def test_grouped_matmul_impls_agree(seed):
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(outs["scan_tiles"][:n], outs["onehot"][:n],
                                rtol=1e-4, atol=1e-4)
+    # dead-tile path: residual rows are exact zeros in every impl (the
+    # seed's ragged impl dumped them into the last local expert; its
+    # deterministic regression test lives in test_moe_fused.py, outside
+    # this module's hypothesis gate)
+    for impl, out in outs.items():
+        assert np.all(out[n:] == 0), impl
