@@ -68,7 +68,16 @@ class ParetoSetup:
                                     # kernel's latency headroom
     moe_impl: str = "ragged"        # engine expert datapath; also picks
                                     # the roofline traffic account
-                                    # ("fused" -> fused, else two_pass)
+                                    # ("fused"/"fused_paged" -> fused,
+                                    # else two_pass)
+    # --- expert-weight pool (serving/expert_pool.py) ---
+    expert_pool: bool = False       # page expert weights host<->HBM
+    hbm_budget_frac: float = 0.0    # pool frames as a fraction of the
+                                    # full weight set (0 -> all frames);
+                                    # with cost_model="roofline" the
+                                    # miss/gate bytes serialize into the
+                                    # step and prefetch overlaps it
+    prefetch_depth: int = 8
 
 
 def build_model(setup: ParetoSetup):
@@ -99,14 +108,22 @@ class ParetoProbe:
     def __init__(self, cfg, dist, params, setup: ParetoSetup, algo: str):
         self.cfg, self.dist, self.params = cfg, dist, params
         self.setup = setup
+        budget = 0
+        if setup.expert_pool and setup.hbm_budget_frac > 0:
+            from repro.serving import expert_page_bytes, moe_layer_count
+            total = (expert_page_bytes(cfg) * moe_layer_count(cfg)
+                     * dist.num_slots)
+            budget = int(total * setup.hbm_budget_frac)
         self.ecfg = EngineConfig(
             max_batch=setup.max_batch, max_len=setup.max_len,
             prefill_chunk=setup.prefill_chunk, decode_algo=algo,
-            moe_impl=setup.moe_impl, rebalance_every=0)
+            moe_impl=setup.moe_impl, rebalance_every=0,
+            expert_pool=setup.expert_pool, hbm_budget_bytes=budget,
+            prefetch_depth=setup.prefetch_depth)
         if setup.cost_model == "roofline":
             from repro.sim import make_roofline_step_cost
-            traffic_impl = ("fused" if setup.moe_impl == "fused"
-                            else "two_pass")
+            traffic_impl = ("fused" if setup.moe_impl
+                            in ("fused", "fused_paged") else "two_pass")
             self.step_cost = make_roofline_step_cost(cfg, traffic_impl)
         else:
             assert setup.cost_model == "activated", setup.cost_model
@@ -177,7 +194,9 @@ def run(fast: bool = False, setup: ParetoSetup = None):
              f"base_metro={base['metro'] * 1e3:.3f}ms;"
              f"sat_metro={sat['metro'] * 1e3:.3f}ms;"
              f"bracketed={bracketed};"
-             f"cost_model={setup.cost_model};moe_impl={setup.moe_impl}")]
+             f"cost_model={setup.cost_model};moe_impl={setup.moe_impl};"
+             f"expert_pool={setup.expert_pool};"
+             f"hbm_budget_frac={setup.hbm_budget_frac}")]
 
     # --- the Pareto point: max sustainable rate at the fixed target ---
     rates, at_rate = {}, {}
@@ -222,12 +241,20 @@ def main():
                     help="decode step cost: raw max_activated or the "
                          "per-impl roofline HBM-bytes model")
     ap.add_argument("--moe-impl", default="ragged",
-                    choices=("ragged", "scan_tiles", "pallas", "fused"),
+                    choices=("ragged", "scan_tiles", "pallas", "fused",
+                             "fused_paged"),
                     help="engine expert-FFN datapath (also selects the "
                          "roofline traffic account)")
+    ap.add_argument("--expert-pool", action="store_true",
+                    help="enable the paged expert-weight pool")
+    ap.add_argument("--hbm-budget-frac", type=float, default=0.0,
+                    help="pool HBM budget as a fraction of the full "
+                         "expert weight set (0 = all-resident)")
     args = ap.parse_args()
     rows, checks = run(fast=args.fast, setup=ParetoSetup(
-        cost_model=args.cost_model, moe_impl=args.moe_impl))
+        cost_model=args.cost_model, moe_impl=args.moe_impl,
+        expert_pool=args.expert_pool,
+        hbm_budget_frac=args.hbm_budget_frac))
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.1f},{derived}")

@@ -295,3 +295,134 @@ def fused_expert_ffn_pallas(x, w_up, w_down, tile_group, *, gated: bool,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
     )(tile_group, n_live, x, w_up, w_down)
+
+
+# ----------------------------------------------------------------------
+# paged fused expert FFN: weights live in a frame pool, manual
+# double-buffered DMA overlaps tile i's compute with tile i+1's fetch
+# ----------------------------------------------------------------------
+
+
+def _paged_kernel(tile_group, n_live, frame_map, x_ref, wu_hbm, wd_hbm,
+                  out_ref, wu_buf, wd_buf, sem, *, fe: int, gated: bool):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+    live = tile_group[i] >= 0
+
+    def _copies(idx, slot):
+        f = frame_map[jnp.maximum(tile_group[idx], 0)]
+        return (pltpu.make_async_copy(wu_hbm.at[f], wu_buf.at[slot],
+                                      sem.at[slot, 0]),
+                pltpu.make_async_copy(wd_hbm.at[f], wd_buf.at[slot],
+                                      sem.at[slot, 1]))
+
+    # warm start: the first tile's weights have no earlier grid step to
+    # hide behind
+    @pl.when((i == 0) & live)
+    def _warm():
+        for cp in _copies(0, 0):
+            cp.start()
+
+    # prefetch the NEXT live tile's frame into the other buffer slot
+    # while this tile computes — the double-buffered overlap.  Dead
+    # tiles issue nothing (manual DMA needs no index-parking trick).
+    nxt = jnp.minimum(i + 1, n - 1)
+
+    @pl.when((i + 1 < n) & (tile_group[nxt] >= 0))
+    def _prefetch():
+        for cp in _copies(nxt, (i + 1) % 2):
+            cp.start()
+
+    @pl.when(live)
+    def _compute():
+        slot = i % 2
+        for cp in _copies(i, slot):
+            cp.wait()
+        h = jnp.dot(x_ref[...], wu_buf[slot],
+                    preferred_element_type=jnp.float32)
+        # cast before the activation: parity with the two-pass datapath
+        # (and fused_expert_ffn_pallas), which gates on the dtype-cast
+        # matmul output
+        h = h.astype(out_ref.dtype)
+        if gated:
+            act = jax.nn.silu(h[:, :fe]) * h[:, fe:]
+        else:
+            act = jax.nn.gelu(h)
+        y = jnp.dot(act.astype(out_ref.dtype), wd_buf[slot],
+                    preferred_element_type=jnp.float32)
+        out_ref[...] = y.astype(out_ref.dtype)
+
+    @pl.when(~live)
+    def _dead():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gated", "tile_m", "interpret"))
+def fused_expert_ffn_paged_pallas(x, wu_pool, wd_pool, frame_map,
+                                  tile_group, *, gated: bool,
+                                  tile_m: int = 0,
+                                  interpret: bool = True):
+    """Fused expert FFN reading weights from a paged frame pool.
+
+    ``wu_pool``: [F, d, n_up*fe] and ``wd_pool``: [F, fe, d] hold F
+    weight *frames* (F >= number of distinct live groups); they stay in
+    ``ANY`` memory space (HBM) and are never blocked by the pipeline.
+    ``frame_map``: [S] int32 maps expert slot -> frame index, so the
+    caller (serving/expert_pool.py) controls physical placement.
+    ``tile_group``: [n_tiles] int32 slot per token tile, -1 = dead.
+
+    Per live tile the kernel manually DMAs frame ``frame_map[group]``'s
+    up+down weights into a 2-slot VMEM ring — tile i's copy is started
+    during tile i-1's compute (double-buffered overlap), with a warm
+    start for tile 0 — then runs up → act → down entirely in VMEM.
+
+    DMA contract: exactly one up + one down copy per LIVE tile; dead
+    tiles issue nothing (no index-parking — the copies are explicit
+    ``pl.when``-guarded ``make_async_copy`` calls, so even an all-dead
+    grid moves zero weight bytes, unlike the automatic pipeline which
+    must prefetch a parked block).  Adjacent same-group tiles refetch
+    (no revisit-skip in the manual path) — acceptable at the pool's
+    page granularity; see kernels/README.md.
+
+    Semantics == fused_expert_ffn_pallas(x, wu_pool[frame_map],
+    wd_pool[frame_map], tile_group) == ref.fused_expert_ffn_ref.
+    """
+    c, d = x.shape
+    _, _, f_up = wu_pool.shape
+    _, fe, _ = wd_pool.shape
+    n_up = 2 if gated else 1
+    assert f_up == n_up * fe, (f_up, n_up, fe)
+    n_tiles = tile_group.shape[0]
+    tile_m = tile_m or c // n_tiles
+    assert c == n_tiles * tile_m, (c, n_tiles, tile_m)
+
+    tile_group = tile_group.astype(jnp.int32)
+    n_live = jnp.sum(tile_group >= 0).astype(jnp.int32)[None]
+    frame_map = frame_map.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_kernel, fe=fe, gated=gated)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n_tiles,),
+            in_specs=[
+                pl.BlockSpec((tile_m, d), lambda i, tg, nl, fm: (i, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),   # up-weight pool
+                pl.BlockSpec(memory_space=pltpu.ANY),   # down-weight pool
+            ],
+            out_specs=pl.BlockSpec((tile_m, d),
+                                   lambda i, tg, nl, fm: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((2, d, f_up), x.dtype),   # up-weight ring
+                pltpu.VMEM((2, fe, d), x.dtype),     # down-weight ring
+                pltpu.SemaphoreType.DMA((2, 2)),     # per slot: up, down
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((c, d), x.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(tile_group, n_live, frame_map, x, wu_pool, wd_pool)

@@ -15,7 +15,9 @@ import os
 import jax
 
 from repro.kernels.metro_route import metro_route_pallas
-from repro.kernels.moe_ffn import fused_expert_ffn_pallas, grouped_ffn_pallas
+from repro.kernels.moe_ffn import (fused_expert_ffn_paged_pallas,
+                                   fused_expert_ffn_pallas,
+                                   grouped_ffn_pallas)
 from repro.kernels.flash_decode import flash_decode_pallas
 
 
@@ -42,6 +44,13 @@ def fused_expert_ffn(x, w_up, w_down, tile_group, *, gated: bool,
     return fused_expert_ffn_pallas(x, w_up, w_down, tile_group,
                                    gated=gated,
                                    interpret=_interpret(interpret))
+
+
+def fused_expert_ffn_paged(x, wu_pool, wd_pool, frame_map, tile_group, *,
+                           gated: bool, interpret=None):
+    return fused_expert_ffn_paged_pallas(x, wu_pool, wd_pool, frame_map,
+                                         tile_group, gated=gated,
+                                         interpret=_interpret(interpret))
 
 
 def flash_decode(q, k_cache, v_cache, pos, block_s: int = 512,

@@ -111,7 +111,8 @@ def apply_encdec(cfg: ModelConfig, dist, params, *, tokens, embeds=None,
              "max_activated": jnp.zeros((), jnp.float32),
              "mean_activated": jnp.zeros((), jnp.float32),
              "max_tokens": jnp.zeros((), jnp.float32),
-             "expert_hist": jnp.zeros((1,), jnp.float32)}
+             "expert_hist": jnp.zeros((1,), jnp.float32),
+             "slot_hist": jnp.zeros((1, 1), jnp.float32)}
 
     if mode in ("train", "prefill"):
         assert frames is not None or embeds is not None

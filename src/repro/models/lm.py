@@ -549,6 +549,11 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
             "max_tokens": jnp.max(stats["max_tokens"]),
             # summed over layers -> rebalance signal [N]
             "expert_hist": jnp.sum(stats["expert_hist"], axis=(0, 1)),
+            # kept per MoE layer [L_moe, R] (layer order): the expert
+            # pool pages weights per (layer, slot), so the executor
+            # replays layers in sequence, not a summed blur
+            "slot_hist": stats["slot_hist"].reshape(
+                -1, stats["slot_hist"].shape[-1]),
         }
     else:
         stats = {"aux_loss": jnp.zeros((), jnp.float32),
@@ -556,7 +561,8 @@ def apply_lm(cfg: ModelConfig, dist: Dist, params, *, tokens=None,
                  "mean_activated": jnp.zeros((), jnp.float32),
                  "max_tokens": jnp.zeros((), jnp.float32),
                  "expert_hist": jnp.zeros((max(cfg.num_experts, 1),),
-                                          jnp.float32)}
+                                          jnp.float32),
+                 "slot_hist": jnp.zeros((1, 1), jnp.float32)}
     return logits, new_cache, stats
 
 

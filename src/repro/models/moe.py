@@ -295,6 +295,16 @@ def _expert_compute(cfg: ModelConfig, w_up, w_down, x, ids, gates, slots,
             xg, w_up.reshape(s_l, d, n_up * fe).astype(x.dtype),
             w_down.astype(x.dtype), tile_group, gated=cfg.gated_mlp)
         y = jax.ad_checkpoint.checkpoint_name(y, "moe_y")
+    elif impl == "fused_paged":
+        # the double-buffered paged megakernel, driven here with the
+        # identity slot->frame map (all local slots resident in order);
+        # the expert-pool bench exercises permuted maps directly
+        from repro.kernels import ops as kops
+        y = kops.fused_expert_ffn_paged(
+            xg, w_up.reshape(s_l, d, n_up * fe).astype(x.dtype),
+            w_down.astype(x.dtype), jnp.arange(s_l, dtype=jnp.int32),
+            tile_group, gated=cfg.gated_mlp)
+        y = jax.ad_checkpoint.checkpoint_name(y, "moe_y")
     else:
         h = grouped_matmul(
             xg, w_up.reshape(s_l, d, n_up * fe).astype(x.dtype),
@@ -374,8 +384,21 @@ def _moe_inner(cfg: ModelConfig, params, tables, x, *, algo, lo, s_loc,
         ).astype(jnp.float32),
         # per-expert token loads (drives EPLB rebalancing in the engine)
         "expert_hist": hist.astype(jnp.float32),
+        # per-physical-slot activation (drives expert-weight paging:
+        # METRO and EPLB pick the same logical experts but different
+        # replica slots, and slots are what the pool pages)
+        "slot_hist": _slot_histogram(slots, ep_size * slots_per_device),
     }
     return out, stats
+
+
+def _slot_histogram(slots, n_slots: int):
+    """[T, k] global physical-slot choices (-1 pads) -> [n_slots] f32
+    activation counts.  Deterministically identical on every rank
+    (redundant routing), like ``expert_hist``."""
+    valid = slots >= 0
+    return jnp.zeros((n_slots,), jnp.float32).at[
+        jnp.where(valid, slots, 0)].add(valid.astype(jnp.float32))
 
 
 def _capacity(t_group: int, k: int, *, algo: str, mode: str, ep: int,
@@ -439,6 +462,7 @@ def moe_ffn(cfg: ModelConfig, dist: Dist, params, tables, x, *,
             "max_tokens": jax.lax.pmax(stats["max_tokens"], axes),
             # identical within an EP group; distinct across data rows
             "expert_hist": jax.lax.psum(stats["expert_hist"], axes) / ep,
+            "slot_hist": jax.lax.psum(stats["slot_hist"], axes) / ep,
         }
 
     has_shared = bool(cfg.num_shared_experts)

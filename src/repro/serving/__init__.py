@@ -5,6 +5,8 @@ from repro.serving.executor import Executor
 from repro.serving.cluster import (ClusterConfig, ClusterEngine,
                                    default_step_cost)
 from repro.serving.kv import PagedKVManager, pages_for
+from repro.serving.expert_pool import (ExpertPagePool, build_expert_pool,
+                                       expert_page_bytes, moe_layer_count)
 from repro.serving.prefix import PrefixMatch, RadixPrefixIndex
 from repro.serving.slo import (SLOTracker, VirtualClock,
                                aggregate_cluster_summary)
@@ -17,6 +19,8 @@ __all__ = ["ServingEngine", "EngineConfig", "Request", "EngineState",
            "Scheduler", "Executor", "ClusterConfig", "ClusterEngine",
            "default_step_cost", "SLOTracker", "VirtualClock",
            "aggregate_cluster_summary", "PagedKVManager", "pages_for",
+           "ExpertPagePool", "build_expert_pool", "expert_page_bytes",
+           "moe_layer_count",
            "PrefixMatch", "RadixPrefixIndex",
            "TrafficConfig", "SyntheticRequest", "generate_trace",
            "replay_open_loop", "replay_closed_loop",

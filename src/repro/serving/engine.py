@@ -144,11 +144,32 @@ class EngineConfig:
                                 # "ragged" | "scan_tiles" | "onehot" |
                                 # "pallas" (two-pass Pallas kernel) |
                                 # "fused" (one-pass up→act→down Pallas
-                                # megakernel, hidden stays in VMEM) —
-                                # see kernels/README.md for the matrix
+                                # megakernel, hidden stays in VMEM) |
+                                # "fused_paged" (fused + explicit
+                                # double-buffered weight DMA from a
+                                # frame pool) — see kernels/README.md
     use_pallas_route: bool = False  # METRO Alg. 1 greedy routing on the
                                     # Pallas scalar-core kernel instead
                                     # of the lax.scan reference
+    # --- expert-weight paging (MoE models bigger than HBM) ---
+    expert_pool: bool = False   # page per-(layer, slot) expert weights
+                                # between a host backing store and a
+                                # bounded HBM frame pool, with
+                                # activation-aware prefetch from the
+                                # router's previous step (MoE archs
+                                # only; ignored otherwise)
+    hbm_budget_bytes: int = 0   # expert-weight HBM budget per replica;
+                                # 0 = every page resident (compulsory
+                                # misses only).  Floored at one layer's
+                                # slot set — the activated working set
+                                # a single layer pins
+    prefetch_depth: int = 8     # pages the prefetcher may fetch
+                                # overlapped per step; the rest of the
+                                # plan waits for the decode residency
+                                # gate (attributed as decode stall)
+    pool_h2d_bw: float = 1.6e10     # modeled host->HBM bandwidth
+                                # (bytes/s) for miss/gate stall
+                                # attribution and the roofline model
 
 
 class ServingEngine:
@@ -162,7 +183,9 @@ class ServingEngine:
         assert ecfg.prefill_mode in ("chunked", "wave"), ecfg.prefill_mode
         assert ecfg.kv_dtype in ("bf16", "fp32", "fp8"), ecfg.kv_dtype
         assert ecfg.moe_impl in ("ragged", "scan_tiles", "onehot",
-                                 "pallas", "fused"), ecfg.moe_impl
+                                 "pallas", "fused",
+                                 "fused_paged"), ecfg.moe_impl
+        assert ecfg.hbm_budget_bytes >= 0 and ecfg.prefetch_depth >= 0
         assert ecfg.kv_dtype == "bf16" or ecfg.kv_layout == "paged", \
             "kv_dtype plumbing is paged-path only"
         self.cfg = cfg
@@ -220,6 +243,10 @@ class ServingEngine:
     @property
     def prefix_index(self):
         return self.state.prefix
+
+    @property
+    def expert_pool(self):
+        return self.exec.expert_pool
 
     @property
     def decode_steps(self):
@@ -296,9 +323,27 @@ class ServingEngine:
             dt += self.step_cost(kind, n_tok, {
                 k: float(np.asarray(stats.get(k, 0.0)))
                 for k in ("max_activated", "mean_activated",
-                          "max_tokens")})
+                          "max_tokens", "pool_miss_bytes",
+                          "pool_prefetch_bytes", "pool_gate_bytes")})
         self._vclock.advance(dt)
         return dt
+
+    def _pool_slo(self, stats, decode: bool):
+        """Fold one engine call's expert-pool hit/miss split into the
+        SLO tracker.  Demand-miss bytes on a decode-carrying call are
+        a decode stall (the step waited for the fetch); prefetch bytes
+        are overlapped and gate bytes were already attributed by the
+        scheduler's residency gate."""
+        pool = self.exec.expert_pool
+        if pool is None or "pool_hits" not in stats:
+            return
+        miss_b = float(stats.get("pool_miss_bytes", 0.0))
+        self.slo.expert_pool_access(
+            hits=int(stats["pool_hits"]),
+            misses=int(stats["pool_misses"]),
+            planned_hits=int(stats["pool_planned_hits"]),
+            stall_s=(pool.stall_seconds(miss_b)
+                     if decode and miss_b else 0.0))
 
     # ------------------------------------------------------------------
     # rebalance (EPLB placement + physical weight reshuffle)
@@ -373,6 +418,7 @@ class ServingEngine:
                 # were not waiting on anything)
                 self.slo.stall("chunk", dt)
             self._update_loads(stats)
+            self._pool_slo(stats, decode=False)
             self._finish_chunks(pwork)
         self._decode_rows(drows)
 
@@ -385,9 +431,12 @@ class ServingEngine:
         bp = _pow2(len(pwork))
         bd = self.sched.bucket(len(drows),
                                self.exec.compiled_buckets("decode"))
+        gate_b = self.sched.gate_decode(self.exec.expert_pool)
         self._start_chunks(pwork)
         nxt, st_p, st_d, wall = self.exec.run_mixed(
             pwork, drows, bp, bd, self.state.kvman)
+        if gate_b:
+            st_d = dict(st_d, pool_gate_bytes=float(gate_b))
         dt = self._charge(
             [("chunk", sum(n for _, n in pwork), st_p),
              ("decode", len(drows), st_d)], wall)
@@ -395,6 +444,8 @@ class ServingEngine:
         # same update order as the pure-phase sequence it replaces
         self._update_loads(st_p)
         self._update_loads(st_d)
+        self._pool_slo(st_p, decode=False)
+        self._pool_slo(st_d, decode=True)
         self._finish_chunks(pwork)
         self._postprocess_decode(drows, nxt)
 
@@ -403,11 +454,15 @@ class ServingEngine:
             return
         b = self.sched.bucket(len(drows),
                               self.exec.compiled_buckets("decode"))
+        gate_b = self.sched.gate_decode(self.exec.expert_pool)
         nxt, stats, wall = self.exec.run_decode(drows, b,
                                                 self.state.kvman)
+        if gate_b:
+            stats = dict(stats, pool_gate_bytes=float(gate_b))
         dt = self._charge([("decode", len(drows), stats)], wall)
         self.slo.step("decode", dt)
         self._update_loads(stats)
+        self._pool_slo(stats, decode=True)
         self._postprocess_decode(drows, nxt)
 
     # ------------------------------------------------------------------
@@ -436,6 +491,7 @@ class ServingEngine:
             self.slo.chunk_done(r.rid)
             self.slo.prefill_done(r.rid)
         self._update_loads(stats)
+        self._pool_slo(stats, decode=False)
 
     # ------------------------------------------------------------------
     # chunk bookkeeping

@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import build_placement
 from repro.models import lm as LM
+from repro.serving.expert_pool import build_expert_pool
 from repro.serving.kv import pages_for
 from repro.serving.scheduler import _pow2
 from repro.serving.state import Request
@@ -69,6 +70,17 @@ class Executor:
             self._logical = self._extract_logical(params)
         else:
             self.placement, self.routing = None, {}
+
+        # paged expert-weight pool (host <-> HBM, activation-aware
+        # prefetch).  Host-side working-set bookkeeping: the step
+        # functions always compute on the true weights (a fetch always
+        # completes before use, so residency never changes the math);
+        # the pool's fetch bytes feed virtual-time cost models and the
+        # SLO's stall attribution.
+        self.expert_pool = (
+            build_expert_pool(cfg, ecfg, dist.num_slots)
+            if cfg.is_moe and getattr(ecfg, "expert_pool", False)
+            else None)
 
         kv_dtype = KV_DTYPES[getattr(ecfg, "kv_dtype", "bf16")]
         if ecfg.kv_layout == "paged":
@@ -117,6 +129,13 @@ class Executor:
             placement = build_placement(
                 self.cfg.num_experts, self.dist.ep_size,
                 self.dist.slots_per_device, loads=loads)
+        if self.expert_pool is not None:
+            # the reshuffle rewrites any slot whose expert assignment
+            # changed — its cached pages (every layer) are stale
+            changed = np.nonzero(
+                np.asarray(self.placement.replica_expert)
+                != np.asarray(placement.replica_expert))[0]
+            self.expert_pool.invalidate_slots(changed)
         self.placement = placement
         self.routing = LM.build_lm_routing(self.cfg, placement,
                                            self._table_width)
@@ -335,6 +354,49 @@ class Executor:
                 jnp.asarray(slot_idx), jnp.asarray(pt))
 
     # ------------------------------------------------------------------
+    # expert-pool accounting (host bookkeeping per executed call)
+    # ------------------------------------------------------------------
+    def _pool_step(self, stats, kind: str):
+        """Replay one call's per-layer activated slots (the router's
+        ``slot_hist``) through the expert pool: acquire/release each
+        MoE layer's pages in sequence, exactly the order the forward
+        pass touches them.  Returns (stats + pool counters, the
+        accessed page ids in layer order — the next step's prefetch
+        plan)."""
+        pool = self.expert_pool
+        if pool is None:
+            return stats, []
+        sh = np.asarray(stats["slot_hist"])
+        assert sh.shape == (pool.n_layers, pool.n_slots), sh.shape
+        hits = misses = planned = miss_b = 0
+        accessed: list[int] = []
+        for li in range(sh.shape[0]):
+            pids = [pool.page_id(li, int(s))
+                    for s in np.nonzero(sh[li] > 0)[0]]
+            res = pool.acquire(pids, kind=kind)
+            pool.release(pids)
+            hits += res["hits"]
+            misses += res["misses"]
+            planned += res["planned_hits"]
+            miss_b += res["miss_bytes"]
+            accessed.extend(pids)
+        stats = dict(stats)
+        stats.update(pool_hits=float(hits), pool_misses=float(misses),
+                     pool_planned_hits=float(planned),
+                     pool_miss_bytes=float(miss_b))
+        return stats, accessed
+
+    def _pool_plan(self, stats, pids, kind: str):
+        """Install step t's accessed pages as step t+1's prefetch plan
+        and charge the overlapped fetch bytes to this call's stats."""
+        pool = self.expert_pool
+        if pool is None:
+            return stats
+        pref = pool.plan_prefetch(pids, kind=kind)
+        stats["pool_prefetch_bytes"] = float(pref)
+        return stats
+
+    # ------------------------------------------------------------------
     # step execution (timed; SLO attribution stays in the façade)
     # ------------------------------------------------------------------
     def run_decode(self, drows: list[Request], bucket: int, kvman):
@@ -346,7 +408,10 @@ class Executor:
             self.params, tokens, pos, slot_idx, pt, self.cache,
             self.routing)
         nxt = np.asarray(nxt)
-        return nxt, stats, time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        stats, pids = self._pool_step(stats, "decode")
+        stats = self._pool_plan(stats, pids, "decode")
+        return nxt, stats, wall
 
     def run_chunk(self, pwork: list[tuple[Request, int]], bp: int, kvman):
         toks, start, n_tok, slot_idx, pt = self.chunk_inputs(pwork, bp,
@@ -356,7 +421,10 @@ class Executor:
         self.cache, stats = fn(self.params, toks, start, n_tok,
                                slot_idx, pt, self.cache, self.routing)
         jax.block_until_ready(stats)
-        return stats, time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        stats, pids = self._pool_step(stats, "chunk")
+        stats = self._pool_plan(stats, pids, "chunk")
+        return stats, wall
 
     def run_mixed(self, pwork: list[tuple[Request, int]],
                   drows: list[Request], bp: int, bd: int, kvman):
@@ -371,7 +439,14 @@ class Executor:
             self.params, p_toks, p_start, p_ntok, p_slot, p_pt,
             d_toks, d_pos, d_slot, d_pt, self.cache, self.routing)
         nxt = np.asarray(nxt)
-        return nxt, st_p, st_d, time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        st_p, pids_p = self._pool_step(st_p, "chunk")
+        st_d, pids_d = self._pool_step(st_d, "decode")
+        # plan: decode pages first (they gate the next decode step),
+        # then the chunk's, deduplicated preserving order
+        plan = list(dict.fromkeys(pids_d + pids_p))
+        st_d = self._pool_plan(st_d, plan, "decode")
+        return nxt, st_p, st_d, wall
 
     def run_wave(self, group: list[Request], lens: list[int], kvman):
         ecfg = self.ecfg
@@ -396,4 +471,7 @@ class Executor:
             jnp.asarray(slot_idx), jnp.asarray(pt), self.cache,
             self.routing)
         jax.block_until_ready(stats)
-        return stats, time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        stats, pids = self._pool_step(stats, "prefill")
+        stats = self._pool_plan(stats, pids, "prefill")
+        return stats, wall

@@ -1,0 +1,330 @@
+"""Paged expert-weight pool with activation-aware prefetch.
+
+The paper's core claim is that memory-bound MoE decode time is HBM
+traffic for *activated* expert weights — which is exactly a working
+set.  This module treats it as one, the way :mod:`repro.serving.kv`
+treats KV: expert weights live in fixed-size per-(moe_layer, physical
+slot) **pages**, a bounded set of HBM **frames** holds the resident
+pages, cold pages stay in the host backing store, and the router's
+step-``t`` output drives an activation-aware prefetch of step
+``t+1``'s pages (HarMoEny-style asynchronous expert fetching).
+
+Allocator discipline mirrors ``PagedKVManager``: LIFO free list,
+refcounted pins while a step computes, LRU eviction among unpinned
+frames, and :meth:`check_consistent` proving free/resident frames are
+disjoint and exhaustive with ``page_frame``/``frame_page`` mutual
+inverses.
+
+Fetch accounting is split three ways, because the three kinds stall
+differently:
+
+* **miss** — a page accessed this step that no prior plan fetched;
+  the step waits for it (demand fetch, serial).
+* **prefetch** — fetched ahead under the previous step's plan, up to
+  ``prefetch_depth`` pages; overlapped with compute (the
+  double-buffered DMA path in ``kernels/moe_ffn.py``).
+* **gate** — planned pages the depth budget deferred, flushed by the
+  scheduler's decode residency gate *before* the next decode step
+  runs (attributed as a decode stall).
+
+Bit-identity invariant: the pool is bookkeeping + virtual-time cost —
+a fetch always completes before the weights are used, so residency
+never changes the math.  ``benchmarks/bench_expert_paging.py`` asserts
+served tokens under a capacity-limited pool are bit-identical to the
+all-resident run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["ExpertPagePool", "expert_page_bytes", "moe_layer_count",
+           "build_expert_pool"]
+
+
+def expert_page_bytes(cfg, bytes_per_param: int = 2) -> int:
+    """Bytes of one physical expert slot's FFN weights (up + down),
+    bf16 by default — the unit the pool pages in and out."""
+    d, fe = cfg.d_model, cfg.expert_hidden
+    n_up = 2 if cfg.gated_mlp else 1
+    return int((d * n_up * fe + fe * d) * bytes_per_param)
+
+
+def moe_layer_count(cfg) -> int:
+    """Number of MoE FFN layers in the full stack."""
+    kinds = cfg.layer_kinds()
+    n_moe = sum(1 for _, f in kinds if f == "moe")
+    return (cfg.num_layers // len(kinds)) * n_moe
+
+
+class ExpertPagePool:
+    """HBM frame allocator for per-(layer, slot) expert-weight pages.
+
+    Pages are identified by a flat ``pid = layer * n_slots + slot``.
+    A page is *resident* iff ``page_frame[pid] >= 0``; a frame is
+    *free* iff it is on the free list (and then maps no page).
+    ``acquire`` pins the accessed pages for the duration of one
+    layer's compute, ``release`` unpins them — the page stays resident
+    (cached) until LRU eviction reclaims its frame for another fetch.
+    """
+
+    def __init__(self, *, n_layers: int, n_slots: int, page_bytes: int,
+                 num_frames: int, h2d_bw: float = 1.6e10,
+                 prefetch_depth: int = 8):
+        assert n_layers >= 1 and n_slots >= 1 and page_bytes >= 1
+        self.n_layers = n_layers
+        self.n_slots = n_slots
+        self.page_bytes = int(page_bytes)
+        self.total_pages = n_layers * n_slots
+        self.num_frames = int(min(num_frames, self.total_pages))
+        # capacity floor: one layer's worst-case activated set must fit
+        # (acquire pins at most n_slots pages at once, so eviction can
+        # always find an unpinned victim)
+        assert self.num_frames >= n_slots, (
+            f"pool of {num_frames} frames cannot hold one layer's "
+            f"{n_slots} slots")
+        self.h2d_bw = float(h2d_bw)
+        self.prefetch_depth = int(prefetch_depth)
+
+        self._free = list(range(self.num_frames - 1, -1, -1))
+        self.page_frame = np.full(self.total_pages, -1, np.int64)
+        self.frame_page = np.full(self.num_frames, -1, np.int64)
+        self.refcount = np.zeros(self.num_frames, np.int64)
+        self._stamp = np.zeros(self.num_frames, np.int64)   # LRU clock
+        self._tick = 0
+        self._planned: set[int] = set()     # last plan_prefetch pids
+        self._pending: list[int] = []       # planned, deferred by depth
+
+        # counters (monotone; SLO/bench read deltas or totals)
+        self.accesses = 0
+        self.hits = 0
+        self.misses = 0
+        self.planned_hits = 0               # accessed page was in plan
+        self.prefetch_issued = 0
+        self.evictions = 0
+        self.invalidations = 0
+        self.miss_bytes = 0
+        self.prefetch_bytes = 0
+        self.gate_bytes = 0
+        # host->HBM bytes split by engine step kind and fetch reason
+        self.bytes_by_kind: dict[str, dict[str, int]] = {}
+
+    # ------------------------------------------------------------------
+    def page_id(self, layer: int, slot: int) -> int:
+        assert 0 <= layer < self.n_layers and 0 <= slot < self.n_slots
+        return layer * self.n_slots + slot
+
+    def resident(self, pid: int) -> bool:
+        return self.page_frame[pid] >= 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def resident_pages(self) -> int:
+        return self.num_frames - len(self._free)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.accesses if self.accesses else 0.0
+
+    @property
+    def prefetch_coverage(self) -> float:
+        """Fraction of accesses the previous step's plan named —
+        1.0 when the router runs exactly one step ahead (oracle)."""
+        return self.planned_hits / self.accesses if self.accesses else 0.0
+
+    def stall_seconds(self, nbytes: int) -> float:
+        return nbytes / self.h2d_bw
+
+    # ------------------------------------------------------------------
+    def _touch(self, f: int):
+        self._tick += 1
+        self._stamp[f] = self._tick
+
+    def _evict_one(self) -> int:
+        """Reclaim the least-recently-used unpinned resident frame."""
+        mapped = self.frame_page >= 0
+        victims = np.nonzero(mapped & (self.refcount == 0))[0]
+        if len(victims) == 0:
+            raise RuntimeError(
+                "expert pool exhausted: every resident frame is pinned")
+        f = int(victims[np.argmin(self._stamp[victims])])
+        self.page_frame[self.frame_page[f]] = -1
+        self.frame_page[f] = -1
+        self.evictions += 1
+        return f
+
+    def _account(self, kind: str, reason: str, nbytes: int):
+        per = self.bytes_by_kind.setdefault(
+            kind, {"miss": 0, "prefetch": 0, "gate": 0})
+        per[reason] += nbytes
+
+    def _fetch(self, pid: int, kind: str, reason: str) -> int:
+        """Bring ``pid`` into a frame from the host backing store."""
+        assert not self.resident(pid)
+        f = self._free.pop() if self._free else self._evict_one()
+        self.frame_page[f] = pid
+        self.page_frame[pid] = f
+        self._touch(f)
+        setattr(self, f"{reason}_bytes",
+                getattr(self, f"{reason}_bytes") + self.page_bytes)
+        self._account(kind, reason, self.page_bytes)
+        return f
+
+    # ------------------------------------------------------------------
+    def acquire(self, pids, kind: str = "decode") -> dict:
+        """Pin the pages one layer's compute touches; demand-fetch any
+        that are not resident.  Returns this call's hit/miss split."""
+        n_hit = n_miss = n_planned = 0
+        for pid in pids:
+            self.accesses += 1
+            if pid in self._planned:
+                self.planned_hits += 1
+                n_planned += 1
+            if self.resident(pid):
+                self.hits += 1
+                n_hit += 1
+                self._touch(int(self.page_frame[pid]))
+            else:
+                self.misses += 1
+                n_miss += 1
+                self._fetch(pid, kind, "miss")
+            self.refcount[self.page_frame[pid]] += 1
+        return {"hits": n_hit, "misses": n_miss,
+                "planned_hits": n_planned,
+                "miss_bytes": n_miss * self.page_bytes}
+
+    def release(self, pids):
+        for pid in pids:
+            f = self.page_frame[pid]
+            assert f >= 0 and self.refcount[f] > 0, \
+                f"release of unpinned page {pid}"
+            self.refcount[f] -= 1
+
+    # ------------------------------------------------------------------
+    def plan_prefetch(self, pids, kind: str = "decode") -> int:
+        """Install step ``t``'s activated pages as the plan for step
+        ``t+1``; start up to ``prefetch_depth`` overlapped fetches and
+        queue the rest for the decode residency gate.  Returns the
+        bytes issued (overlapped — they cost max(compute, DMA), not
+        compute + DMA).  ``prefetch_depth == 0`` disables planning
+        entirely (every cold access becomes a demand miss)."""
+        if self.prefetch_depth <= 0:
+            return 0
+        self._planned = set(pids)
+        self._pending = []
+        issued = 0
+        budget = self.prefetch_depth
+        for pid in pids:
+            if self.resident(pid):
+                self._touch(int(self.page_frame[pid]))
+                continue
+            if budget > 0:
+                self._fetch(pid, kind, "prefetch")
+                self.prefetch_issued += 1
+                issued += self.page_bytes
+                budget -= 1
+            else:
+                self._pending.append(pid)
+        return issued
+
+    def flush_pending(self, kind: str = "decode") -> int:
+        """The decode residency gate: synchronously fetch every planned
+        page the prefetch depth deferred.  Returns the bytes fetched
+        (the caller attributes ``stall_seconds(bytes)`` of stall)."""
+        nbytes = 0
+        for pid in self._pending:
+            if not self.resident(pid):
+                self._fetch(pid, kind, "gate")
+                nbytes += self.page_bytes
+        self._pending = []
+        return nbytes
+
+    # ------------------------------------------------------------------
+    def invalidate_slots(self, slots) -> int:
+        """Drop residency for ``slots`` across every layer — an EPLB
+        reshuffle rewrote those physical slots' weights, so the cached
+        pages are stale.  Must run between steps (nothing pinned)."""
+        dropped = 0
+        for s in slots:
+            for layer in range(self.n_layers):
+                pid = self.page_id(layer, int(s))
+                f = int(self.page_frame[pid])
+                if f < 0:
+                    continue
+                assert self.refcount[f] == 0, \
+                    "invalidate while page pinned"
+                self.page_frame[pid] = -1
+                self.frame_page[f] = -1
+                self._free.append(f)
+                dropped += 1
+        if dropped:
+            self.invalidations += dropped
+            self._planned = set()
+            self._pending = []
+        return dropped
+
+    # ------------------------------------------------------------------
+    def counters(self) -> dict:
+        return {
+            "accesses": self.accesses, "hits": self.hits,
+            "misses": self.misses, "planned_hits": self.planned_hits,
+            "hit_rate": self.hit_rate,
+            "prefetch_coverage": self.prefetch_coverage,
+            "prefetch_issued": self.prefetch_issued,
+            "evictions": self.evictions,
+            "invalidations": self.invalidations,
+            "miss_bytes": self.miss_bytes,
+            "prefetch_bytes": self.prefetch_bytes,
+            "gate_bytes": self.gate_bytes,
+            "h2d_bytes": self.miss_bytes + self.prefetch_bytes
+            + self.gate_bytes,
+            "num_frames": self.num_frames,
+            "resident_pages": self.resident_pages,
+            "bytes_by_kind": {k: dict(v)
+                              for k, v in self.bytes_by_kind.items()},
+        }
+
+    def check_consistent(self):
+        """Allocator invariants, mirroring ``PagedKVManager``."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list duplicates"
+        mapped = {int(f) for f in np.nonzero(self.frame_page >= 0)[0]}
+        assert not (free & mapped), "frame both free and resident"
+        assert free | mapped == set(range(self.num_frames)), \
+            "frame neither free nor resident"
+        for f in mapped:
+            pid = int(self.frame_page[f])
+            assert self.page_frame[pid] == f, \
+                f"frame {f} -> page {pid} not mutually mapped"
+        res = np.nonzero(self.page_frame >= 0)[0]
+        assert len(res) == len(mapped), "page/frame residency mismatch"
+        for pid in res:
+            f = int(self.page_frame[pid])
+            assert self.frame_page[f] == pid, \
+                f"page {pid} -> frame {f} not mutually mapped"
+        assert (self.refcount >= 0).all(), "negative refcount"
+        pinned = np.nonzero(self.refcount > 0)[0]
+        assert all(int(f) in mapped for f in pinned), \
+            "pinned frame holds no page"
+        assert set(self._pending) <= self._planned, \
+            "pending page outside the prefetch plan"
+
+
+def build_expert_pool(cfg, ecfg, n_slots: int):
+    """Size a pool from the engine config: ``hbm_budget_bytes == 0``
+    means every page gets a frame (all-resident; only compulsory
+    misses), otherwise the budget buys ``budget // page_bytes`` frames
+    floored at one layer's slot set."""
+    pb = expert_page_bytes(cfg)
+    n_layers = moe_layer_count(cfg)
+    total = n_layers * n_slots
+    if ecfg.hbm_budget_bytes <= 0:
+        frames = total
+    else:
+        frames = max(int(ecfg.hbm_budget_bytes) // pb, n_slots)
+    return ExpertPagePool(
+        n_layers=n_layers, n_slots=n_slots, page_bytes=pb,
+        num_frames=frames, h2d_bw=ecfg.pool_h2d_bw,
+        prefetch_depth=ecfg.prefetch_depth)

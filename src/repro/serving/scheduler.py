@@ -306,6 +306,23 @@ class Scheduler:
         return min(bigger)
 
     # ------------------------------------------------------------------
+    # expert-pool residency gate
+    # ------------------------------------------------------------------
+    def gate_decode(self, pool) -> int:
+        """Gate a decode-carrying step on expert-page residency: every
+        page the prefetch plan named must be resident before the step
+        runs, so planned pages the ``prefetch_depth`` budget deferred
+        are fetched synchronously here.  The fetch time is attributed
+        as a decode stall (``expert_gate``).  Returns the bytes
+        fetched, which the engine charges to the step's cost model."""
+        if pool is None:
+            return 0
+        nbytes = pool.flush_pending(kind="decode")
+        if nbytes:
+            self.slo.stall("expert_gate", pool.stall_seconds(nbytes))
+        return nbytes
+
+    # ------------------------------------------------------------------
     # rebalance window
     # ------------------------------------------------------------------
     def rebalance_due(self) -> bool:

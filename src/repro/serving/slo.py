@@ -119,6 +119,10 @@ class SLOTracker:
         self.preemptions = 0
         self.stalls: list[tuple[str, float]] = []   # (kind, seconds)
         self.prefix_hit_tokens_total = 0
+        # expert-pool paging counters (expert_pool_access)
+        self.expert_pool_hits = 0
+        self.expert_pool_misses = 0
+        self.expert_pool_planned_hits = 0
         self._t0 = self._clock()
 
     def now(self) -> float:
@@ -211,6 +215,21 @@ class SLOTracker:
         call of the given kind that ran while decode rows waited."""
         self.stalls.append((kind, seconds))
 
+    def expert_pool_access(self, hits: int, misses: int,
+                           planned_hits: int = 0, stall_s: float = 0.0):
+        """Fold one engine call's expert-pool page accesses in: hits
+        (page resident at access), misses (demand-fetched), and
+        planned hits (the previous step's prefetch plan named the
+        page — resident or not; the coverage numerator).  A non-zero
+        ``stall_s`` attributes a decode step's demand-miss fetch wait
+        (kind ``expert_miss``; the scheduler's residency gate records
+        its own ``expert_gate`` stalls via :meth:`stall`)."""
+        self.expert_pool_hits += int(hits)
+        self.expert_pool_misses += int(misses)
+        self.expert_pool_planned_hits += int(planned_hits)
+        if stall_s > 0.0:
+            self.stalls.append(("expert_miss", stall_s))
+
     # ------------------------------------------------------------------
     def summary(self) -> dict:
         done = [t for t in self.timings.values() if t.finished > 0]
@@ -229,6 +248,9 @@ class SLOTracker:
         mix = np.asarray(by_kind.get("mixed", []))
         qd = np.asarray(self.queue_depths)
         stalls = np.asarray([s for _, s in self.stalls])
+        xstalls = np.asarray([s for k, s in self.stalls
+                              if k.startswith("expert")])
+        pool_acc = self.expert_pool_hits + self.expert_pool_misses
         return {
             "requests": len(done),
             "ttft_mean": float(ttfts.mean()),
@@ -280,6 +302,19 @@ class SLOTracker:
             else 0.0,
             "decode_stall_max_s": float(stalls.max()) if len(stalls)
             else 0.0,
+            # expert-pool paging attribution
+            "expert_pool_hits": self.expert_pool_hits,
+            "expert_pool_misses": self.expert_pool_misses,
+            "expert_pool_hit_rate": (self.expert_pool_hits / pool_acc
+                                     if pool_acc else 0.0),
+            "expert_prefetch_coverage": (
+                self.expert_pool_planned_hits / pool_acc
+                if pool_acc else 0.0),
+            "expert_stall_events": len(xstalls),
+            "expert_stall_total_s": float(xstalls.sum())
+            if len(xstalls) else 0.0,
+            "expert_stall_max_s": float(xstalls.max())
+            if len(xstalls) else 0.0,
             "queue_depth_mean": float(qd.mean()) if len(qd) else 0.0,
             "queue_depth_max": int(qd.max()) if len(qd) else 0,
         }
@@ -330,4 +365,18 @@ def aggregate_cluster_summary(trackers: list[SLOTracker]) -> dict:
         "requests_per_replica": [s.get("requests", 0) for s in per],
         "replicas": per,
     }
+    # expert-pool rollup: ratios recomputed from the pooled counts
+    # (never averaged per-replica ratios)
+    hits = sum(t.expert_pool_hits for t in trackers)
+    misses = sum(t.expert_pool_misses for t in trackers)
+    planned = sum(t.expert_pool_planned_hits for t in trackers)
+    acc = hits + misses
+    out["expert_pool_hits"] = hits
+    out["expert_pool_misses"] = misses
+    out["expert_pool_hit_rate"] = hits / acc if acc else 0.0
+    out["expert_prefetch_coverage"] = planned / acc if acc else 0.0
+    out["expert_stall_total_s"] = sum(
+        s.get("expert_stall_total_s", 0.0) for s in per)
+    out["expert_stall_events"] = sum(
+        s.get("expert_stall_events", 0) for s in per)
     return out

@@ -190,13 +190,18 @@ def fused_weight_dma_tiles(tile_group, k_up_tiles: int,
     ``dma_tiles == live_tiles * (k_up + k_down)`` exactly; adjacent
     live tiles sharing a group with a single-k-tile operand can only
     *lower* the count (the repeated index is skipped too).
+
+    An all-dead (but non-empty) grid is NOT free: Pallas index maps
+    must name a block, so the dead tiles park on group 0's first
+    up/down blocks and the pipeline physically prefetches each of
+    them once (``dma_tiles == 2``, ``m_tiles == 1``) even though they
+    feed no compute.  ``expert_ffn_traffic`` stays a *marginal-cost*
+    model (0 bytes at ``live_tiles == 0``); this function counts the
+    physical fetches.  An empty ``tile_group`` fetches nothing.
     """
     tg = np.asarray(tile_group, np.int64)
     n_live = int((tg >= 0).sum())
-    if n_live == 0:
-        # an all-dead grid still physically prefetches the parked
-        # (group 0) block once — Pallas index maps must name a block —
-        # but it feeds no compute; the model charges nothing
+    if len(tg) == 0:
         return {"dma_tiles": 0, "m_tiles": 0, "live_tiles": 0}
     count = 0
     fetching = set()
@@ -227,6 +232,7 @@ def fused_weight_dma_tiles(tile_group, k_up_tiles: int,
 def make_roofline_step_cost(cfg: ModelConfig, impl: str, *,
                             k: Optional[int] = None, tile: int = 8,
                             hbm_bw: float = 8.0e11,
+                            h2d_bw: float = 1.6e10,
                             base: float = 2e-4,
                             prefill_per_tok: float = 2e-5):
     """Virtual-clock ``step_cost(kind, n_tokens, stats)`` charging the
@@ -242,6 +248,16 @@ def make_roofline_step_cost(cfg: ModelConfig, impl: str, *,
     modeled latency, which is how the Pareto harness shows the fused
     kernel's headroom.  Prefill-carrying calls stay compute-bound
     (token-proportional), matching ``cluster.default_step_cost``.
+
+    When the expert-weight pool is enabled the executor reports
+    host<->HBM page traffic in the stats: demand misses and
+    residency-gate flushes (``pool_miss_bytes`` + ``pool_gate_bytes``)
+    are serial — the step cannot start until the weights land — while
+    ``pool_prefetch_bytes`` overlaps the step's compute/HBM time via
+    the double-buffered DMA pipeline, so it is charged as
+    ``max(step, prefetch)``.  All three cross the host link at
+    ``h2d_bw`` (PCIe-class, ~50x slower than HBM), which is what makes
+    the tokens/s-vs-budget curves in ``bench_expert_paging`` bend.
     """
     assert impl in ("fused", "two_pass", "two_pass_legacy"), impl
     k = k or max(cfg.num_experts_per_tok, 1)
@@ -253,15 +269,20 @@ def make_roofline_step_cost(cfg: ModelConfig, impl: str, *,
     n_up = 2 if cfg.gated_mlp else 1
 
     def step_cost(kind: str, n_tokens: int, stats: dict) -> float:
+        demand = (float(stats.get("pool_miss_bytes", 0.0))
+                  + float(stats.get("pool_gate_bytes", 0.0))) / h2d_bw
+        prefetch = float(stats.get("pool_prefetch_bytes", 0.0)) / h2d_bw
         if kind != "decode":
-            return base + prefill_per_tok * n_tokens
+            step = base + prefill_per_tok * n_tokens
+            return max(step, prefetch) + demand
         act = int(stats["max_activated"])
         n_tiles = max(int(np.ceil(n_tokens * k / tile)), 1, act)
         tr = expert_ffn_traffic(
             impl, d=cfg.d_model, fe=cfg.expert_hidden, n_up=n_up,
             tile_m=tile, n_tiles=n_tiles, live_tiles=act)
-        return base + moe_layers * tr["total"] / hbm_bw \
+        step = base + moe_layers * tr["total"] / hbm_bw \
             + 1e-5 * n_tokens
+        return max(step, prefetch) + demand
 
     return step_cost
 

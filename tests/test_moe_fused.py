@@ -261,18 +261,31 @@ class TestTrafficAndDmaModel:
             np.array([0, 1, 2, -1, -1]),
             np.array([0, 0, 2, 2, 2, -1]),
             np.array([1]),
-            np.array([-1, -1]),
         ]
         for tg in cases:
             k_up, k_dn = 2, 3
             got = fused_weight_dma_tiles(tg, k_up, k_dn)
             live = tg[tg >= 0]
             stripped = fused_weight_dma_tiles(live, k_up, k_dn)
-            # dead tiles contribute zero fetches
+            # trailing dead tiles contribute zero fetches: they park on
+            # the last live tile's already-resident blocks
             assert got["dma_tiles"] == stripped["dma_tiles"]
             assert got["m_tiles"] == got["live_tiles"] == len(live)
-            if len(live):
-                assert got["dma_tiles"] == len(live) * (k_up + k_dn)
+            assert got["dma_tiles"] == len(live) * (k_up + k_dn)
+
+    def test_all_dead_grid_still_fetches_parked_block(self):
+        """A non-empty all-dead grid has no prior live tile to park on:
+        the index maps name group 0's first up/down blocks and the
+        pipeline physically prefetches each once.  The marginal-cost
+        traffic model stays at zero; the DMA count does not."""
+        got = fused_weight_dma_tiles(np.array([-1, -1]), 2, 3)
+        assert got == {"dma_tiles": 2, "m_tiles": 1, "live_tiles": 0}
+        # longer all-dead grids keep parking on the same block
+        got4 = fused_weight_dma_tiles(np.array([-1] * 4), 1, 1)
+        assert got4 == {"dma_tiles": 2, "m_tiles": 1, "live_tiles": 0}
+        # an empty grid runs no pipeline at all
+        empty = fused_weight_dma_tiles(np.array([], np.int64), 2, 3)
+        assert empty == {"dma_tiles": 0, "m_tiles": 0, "live_tiles": 0}
 
     def test_single_k_tile_adjacent_group_reuse(self):
         """k_up == k_dn == 1 and a repeated group: the second tile's

@@ -161,3 +161,79 @@ class TestCounters:
         assert s["decode_stall_events"] == 0
         assert s["decode_stall_total_s"] == 0.0
         assert s["prefill_chunks"] == 0
+        assert s["expert_pool_hits"] == 0
+        assert s["expert_pool_hit_rate"] == 0.0
+        assert s["expert_prefetch_coverage"] == 0.0
+        assert s["expert_stall_events"] == 0
+
+
+def _finished_tracker():
+    """A tracker with one finished request so summary() is non-empty."""
+    slo, clk = _tracker()
+    slo.arrive(0, 4)
+    clk.t = 1.0
+    slo.first_token(0)
+    slo.finish(0)
+    return slo, clk
+
+
+class TestExpertPool:
+    def test_counters_and_ratios_accumulate(self):
+        slo, _ = _finished_tracker()
+        slo.expert_pool_access(hits=3, misses=1, planned_hits=2)
+        slo.expert_pool_access(hits=5, misses=3, planned_hits=4)
+        s = slo.summary()
+        assert s["expert_pool_hits"] == 8
+        assert s["expert_pool_misses"] == 4
+        assert s["expert_pool_hit_rate"] == pytest.approx(8 / 12)
+        # coverage counts pages the previous plan named, resident or
+        # not — a different numerator than the hit rate
+        assert s["expert_prefetch_coverage"] == pytest.approx(6 / 12)
+
+    def test_miss_stall_lands_in_both_accounts(self):
+        """An expert demand-miss stall is a decode stall (generic
+        account) AND an expert stall (its own attribution)."""
+        slo, _ = _finished_tracker()
+        slo.expert_pool_access(hits=0, misses=2, stall_s=0.3)
+        slo.stall("expert_gate", 0.1)       # scheduler residency gate
+        slo.stall("chunk", 0.5)             # unrelated decode stall
+        s = slo.summary()
+        assert s["expert_stall_events"] == 2
+        assert s["expert_stall_total_s"] == pytest.approx(0.4)
+        assert s["expert_stall_max_s"] == pytest.approx(0.3)
+        assert s["decode_stall_events"] == 3
+        assert s["decode_stall_total_s"] == pytest.approx(0.9)
+
+    def test_zero_stall_records_no_event(self):
+        slo, _ = _finished_tracker()
+        slo.expert_pool_access(hits=1, misses=0, stall_s=0.0)
+        s = slo.summary()
+        assert s["expert_stall_events"] == 0
+        assert s["expert_pool_hits"] == 1
+
+    def test_cluster_rollup_recomputes_ratios(self):
+        """Pooled hit rate comes from pooled counts, not an average of
+        per-replica ratios (an unevenly loaded replica would skew an
+        average; pooled counts weight by traffic)."""
+        from repro.serving import aggregate_cluster_summary
+        trackers = []
+        for hits, misses, planned, stall in ((19, 1, 10, 0.2),
+                                             (1, 9, 2, 0.7)):
+            slo, clk = _tracker()
+            slo.arrive(0, 4)
+            clk.t = 1.0
+            slo.first_token(0)
+            slo.finish(0)
+            slo.expert_pool_access(hits=hits, misses=misses,
+                                   planned_hits=planned, stall_s=stall)
+            trackers.append(slo)
+        agg = aggregate_cluster_summary(trackers)
+        assert agg["expert_pool_hits"] == 20
+        assert agg["expert_pool_misses"] == 10
+        assert agg["expert_pool_hit_rate"] == pytest.approx(2 / 3)
+        per_replica_mean = np.mean([19 / 20, 1 / 10])
+        assert agg["expert_pool_hit_rate"] != pytest.approx(
+            per_replica_mean)
+        assert agg["expert_prefetch_coverage"] == pytest.approx(12 / 30)
+        assert agg["expert_stall_events"] == 2
+        assert agg["expert_stall_total_s"] == pytest.approx(0.9)
